@@ -1,0 +1,58 @@
+"""Pallas-kernel micro-benchmarks (interpret mode on CPU: these wall-times
+track correctness-path overhead, not TPU performance — the TPU story is the
+dry-run roofline; this harness exists to catch algorithmic regressions and
+to compare kernel vs oracle at equal shapes)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cauchy_mean.ops import cauchy_weighted_sum
+from repro.kernels.cauchy_mean.ref import cauchy_weighted_sum_ref
+from repro.kernels.kmeans_assign.ops import assign_nearest
+from repro.kernels.kmeans_assign.ref import assign_nearest_ref
+from repro.kernels.pairwise.ops import pairwise_dist2
+from repro.kernels.pairwise.ref import pairwise_dist2_ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(quick: bool = False):
+    rows = []
+    k1, k2 = jax.random.split(jax.random.key(0))
+
+    x = jax.random.normal(k1, (1024, 256))
+    y = jax.random.normal(k2, (1024, 256))
+    rows.append(("kernel/pairwise_1024x1024x256", _time(pairwise_dist2, x, y), "interpret"))
+    rows.append(("kernel/pairwise_ref", _time(jax.jit(pairwise_dist2_ref), x, y), "oracle"))
+
+    B, K = 2048, 2048
+    th = jax.random.normal(k1, (B, 2))
+    mu = jax.random.normal(k2, (K, 2))
+    w = jnp.ones((K,))
+    own = jnp.zeros((B,), jnp.int32)
+    rows.append(("kernel/cauchy_mean_2048x2048", _time(cauchy_weighted_sum, th, mu, w, own), "interpret"))
+    rows.append(
+        ("kernel/cauchy_mean_ref", _time(jax.jit(cauchy_weighted_sum_ref), th, mu, w, own), "oracle")
+    )
+
+    xs = jax.random.normal(k1, (4096, 128))
+    cs = jax.random.normal(k2, (256, 128))
+    rows.append(("kernel/kmeans_assign_4096x256", _time(assign_nearest, xs, cs), "interpret"))
+    rows.append(("kernel/kmeans_assign_ref", _time(jax.jit(assign_nearest_ref), xs, cs), "oracle"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(c) for c in r))

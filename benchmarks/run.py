@@ -1,0 +1,54 @@
+"""Benchmark harness entry point (assignment deliverable d).
+
+One module per paper artifact; each exposes ``run(quick) -> [(name,
+us_per_call, derived), …]`` and this driver prints the combined CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # full
+  PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized
+  PYTHONPATH=src python -m benchmarks.run --only fig3,kernels
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = {
+    "fig3": "benchmarks.fig3_speed_quality",  # paper Figure 3
+    "table1": "benchmarks.table1_pubmed",  # paper Table 1
+    "fig4": "benchmarks.fig4_multiscale",  # paper Figures 1 & 4
+    "roofline": "benchmarks.roofline_table",  # assignment §Roofline
+    "kernels": "benchmarks.kernel_micro",  # Pallas kernels
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="", help="comma-separated suite names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    import importlib
+
+    print("name,us_per_call,derived")
+    failed = []
+    for key, mod_name in SUITES.items():
+        if key not in only:
+            continue
+        try:
+            mod = importlib.import_module(mod_name)
+            for name, us, derived in mod.run(quick=args.quick):
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:  # noqa: BLE001 — report and continue the suite
+            failed.append(key)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,72 @@
+"""Distributed NOMAD Projection on 8 simulated devices (paper Fig. 2).
+
+    PYTHONPATH=src python examples/distributed_map.py [--hierarchical]
+
+Demonstrates the paper's distribution strategy end to end: clusters sharded
+across a (data=2, model=4) mesh — or a (pod=2, data=2, model=2) mesh with
+the hierarchical super-mean exchange when --hierarchical is given — with
+the per-epoch means all-gather as the only collective. Compares quality and
+wall-time against the single-device reference on the same index.
+"""
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, "src")
+
+import time
+
+import numpy as np
+
+
+def main():
+    import jax
+
+    from repro.configs.base import NomadConfig
+    from repro.core.distributed import fit_distributed
+    from repro.core.nomad import NomadProjection
+    from repro.data.synthetic import gaussian_mixture
+    from repro.index.ann import build_index
+    from repro.launch.mesh import make_mesh
+    from repro.metrics import neighborhood_preservation, random_triplet_accuracy
+
+    hier = "--hierarchical" in sys.argv
+    n, dim = 12_000, 64
+    x, labels = gaussian_mixture(n, dim, n_components=10, seed=0)
+    cfg = NomadConfig(
+        n_points=n, dim=dim, n_clusters=16, n_neighbors=15, n_noise=48,
+        n_exact_negatives=8, batch_size=1024, n_epochs=30,
+        use_pallas=False, hierarchical=hier,
+    )
+    print("building index …")
+    index = build_index(x, cfg)
+
+    print("single-device reference …")
+    t0 = time.time()
+    ref = NomadProjection(cfg).fit(x, index=index)
+    t_ref = time.time() - t0
+
+    if hier:
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        pod_axis = "pod"
+        print("8 shards, hierarchical (pod super-means across the slow axis) …")
+    else:
+        mesh = make_mesh((2, 4), ("data", "model"))
+        pod_axis = None
+        print("8 shards, flat mean exchange (the paper's strategy) …")
+    t0 = time.time()
+    emb, _, losses = fit_distributed(cfg, x, mesh, pod_axis=pod_axis, index=index)
+    t_dist = time.time() - t0
+
+    for name, e, t in (("1-device", ref.embedding, t_ref), ("8-shard", emb, t_dist)):
+        np10 = neighborhood_preservation(x, e, k=10, n_queries=800)
+        rta = random_triplet_accuracy(x, e, 20_000)
+        print(f"{name:9s}: {t:6.1f}s  NP@10={np10:.4f}  triplet={rta:.4f}")
+    print(f"(simulated devices share one CPU — wall-clock parity is the "
+          f"expectation here; on real chips the 8-shard fit is ~8× faster "
+          f"per epoch, which is the paper's Table-1 claim)")
+
+
+if __name__ == "__main__":
+    main()

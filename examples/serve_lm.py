@@ -1,0 +1,83 @@
+"""Batched serving demo: prefill a batch of prompts, then decode tokens
+autoregressively with the KV/SSM cache machinery — the ``serve_step`` path
+the decode dry-run cells lower, exercised end to end on CPU.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b --new-tokens 24
+
+Works for every decode-capable zoo family (dense / MoE / SSM / hybrid /
+SWA ring buffer).
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import ARCHS, reduced
+    from repro.models import lm, steps as steps_lib
+
+    # ssm_chunk=1 lets SSD prefill any prompt length (demo-sized model)
+    cfg = reduced(ARCHS[args.arch], n_layers=4, ssm_chunk=1)
+    if cfg.encoder_only:
+        raise SystemExit(f"{args.arch} is encoder-only; pick a decoder arch")
+    print(f"serving {cfg.name} ({cfg.family}); batch={args.batch}, "
+          f"prompt={args.prompt_len}, new={args.new_tokens}")
+
+    params = lm.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    total = args.prompt_len + args.new_tokens
+    if cfg.family == "vlm":
+        prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len - cfg.n_vision_patches))
+        patches = rng.normal(0, 1, (args.batch, cfg.n_vision_patches, cfg.d_model)).astype(np.float32)
+        batch = {"tokens": jnp.asarray(prompts[:, :-1]), "patches": jnp.asarray(patches)}
+    else:
+        prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))
+        batch = {"tokens": jnp.asarray(prompts[:, :-1])}
+
+    prefill = jax.jit(steps_lib.make_prefill_step(cfg))
+    decode = jax.jit(steps_lib.make_decode_step(cfg))
+
+    t0 = time.time()
+    logits, stacked = prefill(params, batch)
+    print(f"prefill: {time.time()-t0:.2f}s (logits {logits.shape})")
+
+    # load the prefill outputs into a decode cache sized for the full run
+    cache = lm.init_cache(cfg, args.batch, total, filled=args.prompt_len - 1)
+    cache = lm.load_cache_from_prefill(cfg, cache, stacked, args.prompt_len - 1)
+
+    tok = jnp.asarray(prompts[:, -1:])
+    generated = []
+    t0 = time.time()
+    for i in range(args.new_tokens):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        generated.append(np.asarray(tok)[:, 0])
+    dt = time.time() - t0
+    gen = np.stack(generated, axis=1)
+    print(f"decoded {args.new_tokens} tokens × {args.batch} seqs in {dt:.2f}s "
+          f"({args.new_tokens*args.batch/dt:.1f} tok/s on CPU)")
+    print("sampled continuations (greedy):")
+    for b in range(args.batch):
+        print(f"  seq{b}: …{prompts[b,-5:].tolist()} → {gen[b,:12].tolist()}…")
+    assert np.isfinite(np.asarray(logits)).all()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointer import Checkpointer, latest_step
+
+__all__ = ["Checkpointer", "latest_step"]

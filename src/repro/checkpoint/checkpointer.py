@@ -1,0 +1,175 @@
+"""Fault-tolerant checkpointing.
+
+Design (mirrors what a multi-host deployment needs, executed single-host):
+
+* a checkpoint is a directory ``step_<n>/`` holding one ``shard_<i>.npz``
+  per logical shard plus a ``manifest.json`` (tree structure, shard map,
+  user metadata such as epoch/rng state/config digest);
+* writes go to ``step_<n>.tmp/`` and are committed by a single atomic
+  ``rename`` — a crash mid-write can never corrupt the latest checkpoint;
+* saves can run on a background thread (``async_save=True``); the next
+  save (or ``wait()``) joins the previous one first, bounding dirty state
+  to one checkpoint;
+* restore supports **elastic resharding**: row-sharded leaves are stored
+  with their global shapes, so a checkpoint written from 8 shards restores
+  onto 4 or 16 — this is the node-failure / elastic-scaling path, and the
+  multi-pod story depends on it (see tests/test_checkpoint.py);
+* ``keep`` bounds retained checkpoints (oldest pruned after commit).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    """Stable depth-first flatten of nested dict/list pytrees of arrays."""
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], f"{prefix}/{k}" if prefix else str(k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def _unflatten_into(skeleton, flat: dict, prefix=""):
+    if isinstance(skeleton, dict):
+        return {
+            k: _unflatten_into(v, flat, f"{prefix}/{k}" if prefix else str(k))
+            for k, v in skeleton.items()
+        }
+    if isinstance(skeleton, (list, tuple)):
+        vals = [
+            _unflatten_into(v, flat, f"{prefix}/{i}") for i, v in enumerate(skeleton)
+        ]
+        return type(skeleton)(vals)
+    return flat[prefix]
+
+
+class Checkpointer:
+    def __init__(
+        self,
+        directory: str,
+        *,
+        n_shards: int = 1,
+        keep: int = 3,
+        async_save: bool = False,
+    ):
+        self.dir = directory
+        self.n_shards = n_shards
+        self.keep = keep
+        self._pool = cf.ThreadPoolExecutor(max_workers=1) if async_save else None
+        self._pending: Optional[cf.Future] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+
+    def save(self, step: int, tree: dict, *, sharded_keys=(), metadata: Optional[dict] = None):
+        """``sharded_keys``: names (flat paths) whose leading axis is split
+        into ``n_shards`` row blocks — one block per shard file."""
+        self.wait()
+        arrays = {k: np.asarray(v) for k, v in _flatten(tree)}
+        if self._pool is None:
+            self._write(step, arrays, tuple(sharded_keys), metadata or {})
+        else:
+            self._pending = self._pool.submit(
+                self._write, step, arrays, tuple(sharded_keys), metadata or {}
+            )
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _write(self, step: int, arrays: dict, sharded_keys, metadata: dict):
+        tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {
+            "step": step,
+            "n_shards": self.n_shards,
+            "sharded": list(sharded_keys),
+            "metadata": metadata,
+            "leaves": {
+                k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in arrays.items()
+            },
+        }
+        for s in range(self.n_shards):
+            payload = {}
+            for k, v in arrays.items():
+                if k in sharded_keys:
+                    n = v.shape[0]
+                    assert n % self.n_shards == 0, (k, n, self.n_shards)
+                    blk = n // self.n_shards
+                    payload[k] = v[s * blk : (s + 1) * blk]
+                elif s == 0:  # replicated leaves live in shard 0 only
+                    payload[k] = v
+            np.savez(os.path.join(tmp, f"shard_{s:05d}.npz"), **payload)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # the atomic commit point
+        self._prune()
+
+    def _prune(self):
+        steps = sorted(self._steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+
+    def _steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return out
+
+    def restore(self, skeleton: dict, step: Optional[int] = None):
+        """Returns (tree, metadata). ``skeleton`` fixes the pytree structure;
+        global array shapes come from the files, so the caller may re-shard
+        onto any device count afterwards (elastic restore)."""
+        steps = self._steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        step = max(steps) if step is None else step
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        sharded = set(manifest["sharded"])
+        flat: dict[str, Any] = {}
+        parts: dict[str, list] = {k: [] for k in sharded}
+        for s in range(manifest["n_shards"]):
+            with np.load(os.path.join(path, f"shard_{s:05d}.npz")) as z:
+                for k in z.files:
+                    if k in sharded:
+                        parts[k].append(z[k])
+                    else:
+                        flat[k] = z[k]
+        for k, chunks in parts.items():
+            flat[k] = np.concatenate(chunks, axis=0)
+        tree = _unflatten_into(skeleton, flat)
+        return tree, manifest["metadata"]
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(n.split("_")[1])
+        for n in os.listdir(directory)
+        if n.startswith("step_") and not n.endswith(".tmp")
+    ]
+    return max(steps) if steps else None

@@ -1,0 +1,54 @@
+"""NOMAD Projection workload configs — the paper's own experiments.
+
+* ``nomad_quickstart`` — CPU-sized synthetic workload used by examples/tests.
+* ``nomad_pubmed``     — Table-1-scale workload (PubMed: ~24M abstracts,
+  768-d BERT embeddings in the paper; sized for the production mesh here).
+* ``nomad_wiki60m``    — the paper's flagship: 60M-point Multilingual
+  Wikipedia map (BGE-M3, 1024-d), the largest published data map.
+
+The two production workloads are exercised through the multi-pod dry-run
+(`--arch nomad_wiki60m`), proving the distributed epoch step lowers and
+compiles on the 256/512-chip meshes.
+"""
+
+from repro.configs.base import NomadConfig
+
+QUICKSTART = NomadConfig(
+    name="nomad_quickstart",
+    n_points=20_000,
+    dim=64,
+    n_clusters=16,
+    n_neighbors=15,
+    n_noise=64,
+    n_exact_negatives=8,
+    batch_size=2_048,
+    n_epochs=200,  # epochs are cheap; quality scales with them (Fig. 3)
+)
+
+PUBMED = NomadConfig(
+    name="nomad_pubmed",
+    n_points=24_000_000,
+    dim=768,
+    n_clusters=4_096,
+    n_neighbors=15,
+    n_noise=128,
+    n_exact_negatives=16,
+    batch_size=8_192,
+    n_epochs=60,
+    kmeans_iters=50,
+)
+
+WIKI60M = NomadConfig(
+    name="nomad_wiki60m",
+    n_points=60_000_000,
+    dim=1024,
+    n_clusters=8_192,
+    n_neighbors=15,
+    n_noise=128,
+    n_exact_negatives=16,
+    batch_size=8_192,
+    n_epochs=80,
+    kmeans_iters=50,
+)
+
+NOMAD_WORKLOADS = {c.name: c for c in (QUICKSTART, PUBMED, WIKI60M)}

@@ -1,0 +1,17 @@
+from repro.core.cauchy import cauchy, cauchy_pairwise
+from repro.core.losses import contrastive_loss, infonc_tsne_loss, nomad_loss
+from repro.core.nomad import FitResult, NomadProjection, make_epoch_fn, make_step_fn
+from repro.core.pca import pca_init
+
+__all__ = [
+    "cauchy",
+    "cauchy_pairwise",
+    "contrastive_loss",
+    "infonc_tsne_loss",
+    "nomad_loss",
+    "NomadProjection",
+    "FitResult",
+    "make_step_fn",
+    "make_epoch_fn",
+    "pca_init",
+]

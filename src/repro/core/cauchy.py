@@ -1,0 +1,27 @@
+"""The Cauchy affinity kernel (paper Eq. 1): q(θi, θj) = 1 / (1 + ‖θi−θj‖²).
+
+All affinity math is fp32: near q→1 the gradient is dominated by the tiny
+‖θi−θj‖² term and bf16 rounding destroys the spring forces.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cauchy(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise-broadcast Cauchy affinity over the last axis."""
+    d2 = jnp.sum(jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)), axis=-1)
+    return 1.0 / (1.0 + d2)
+
+
+def cauchy_pairwise(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(Na, d) × (Nb, d) → (Na, Nb) Cauchy affinities (MXU-friendly form)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    d2 = (
+        jnp.sum(jnp.square(a), -1)[:, None]
+        + jnp.sum(jnp.square(b), -1)[None, :]
+        - 2.0 * (a @ b.T)
+    )
+    return 1.0 / (1.0 + jnp.maximum(d2, 0.0))

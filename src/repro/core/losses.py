@@ -1,0 +1,112 @@
+"""InfoNC-t-SNE loss (Eq. 2) and the NOMAD surrogate (Eq. 3–5).
+
+Both are implemented through one batched primitive so their equivalence when
+R̃ = ∅ (the paper's reduction property) is structural, not coincidental:
+
+    L = −(1/B) Σ_b Σ_s w_pos[b,s] · [log q(b,s) − log(q(b,s) + M̃_b + M_b)]
+
+    M̃_b = Σ_r mean_w[b,r] · q(θ_b, μ_r)          (approximated cells)
+    M_b  = Σ_s neg_w[b,s] · q(θ_b, θ_neg[b,s])    (exactly-sampled cells)
+
+with ``mean_w[b,r] = |M| · p(m∈r)`` for approximated cells r (0 for the
+head's own cell and non-approximated cells) and ``neg_w`` the importance
+weight of each drawn sample (``|M| · p(m∈r) / n_samples_r``).
+
+The hot term M̃ (B × K Cauchy evaluations per step) is served by the fused
+Pallas kernel (:mod:`repro.kernels.cauchy_mean`) when ``use_pallas=True``,
+which builds the ``|M|·p(m∈r)·[r ≠ own]`` weights in-register; the pure jnp
+path is the oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cauchy import cauchy
+
+
+def mean_term_jnp(theta_i: jax.Array, means: jax.Array, mean_w: jax.Array) -> jax.Array:
+    """Generic M̃: (B,d) × (K,d) × (B,K) → (B,). Oracle/test path."""
+    q_im = cauchy(theta_i[:, None, :], means[None, :, :])  # (B, K)
+    return jnp.sum(mean_w * q_im, axis=-1)
+
+
+def nomad_mean_term(
+    theta_i: jax.Array,
+    means: jax.Array,
+    cell_w: jax.Array,  # (K,) = |M| · p(m∈r)
+    own_cell: jax.Array,  # (B,) global cell id of each head (excluded from M̃)
+    use_pallas: bool,
+) -> jax.Array:
+    if use_pallas:
+        from repro.kernels.cauchy_mean.ops import cauchy_weighted_sum
+
+        return cauchy_weighted_sum(theta_i, means, cell_w, own_cell)
+    K = means.shape[0]
+    mask = own_cell[:, None] != jnp.arange(K, dtype=own_cell.dtype)[None, :]
+    return mean_term_jnp(theta_i, means, cell_w[None, :] * mask)
+
+
+def contrastive_loss(
+    theta_i: jax.Array,  # (B, d) head positions
+    theta_pos: jax.Array,  # (B, k, d) positive (kNN) tail positions
+    pos_w: jax.Array,  # (B, k) p(j|i) weights (0 ⇒ edge absent)
+    m_tilde: jax.Array,  # (B,) mean-approximated negative mass (M̃)
+    theta_neg: Optional[jax.Array] = None,  # (B, S, d) sampled negatives
+    neg_w: Optional[jax.Array] = None,  # (B, S) importance weights
+) -> jax.Array:
+    """The shared primitive above. Returns a scalar (mean over the batch)."""
+    q_pos = cauchy(theta_i[:, None, :], theta_pos)  # (B, k)
+    if theta_neg is not None:
+        q_neg = cauchy(theta_i[:, None, :], theta_neg)  # (B, S)
+        m_exact = jnp.sum(neg_w * q_neg, axis=-1)  # (B,)
+    else:
+        m_exact = jnp.zeros(theta_i.shape[:1], jnp.float32)
+    denom = q_pos + (m_tilde + m_exact)[:, None]
+    per_edge = jnp.log(q_pos) - jnp.log(denom)
+    loss = -jnp.sum(pos_w * per_edge, axis=-1)  # (B,)
+    return jnp.mean(loss)
+
+
+def infonc_tsne_loss(theta_i, theta_pos, pos_w, theta_noise):
+    """Eq. 2 estimator: denominators from |M| uniformly-drawn noise tails.
+
+    theta_noise: (B, M, d). Mirrors Damrich et al.'s InfoNC-t-SNE with the
+    explicit p(j|i) weights of Eq. 6 (NOMAD models p(j|i) explicitly). This
+    is the R̃ = ∅ corner of the NOMAD loss: M̃ ≡ 0 and every noise draw is
+    an exact sample with unit weight.
+    """
+    B, M, _ = theta_noise.shape
+    m_tilde = jnp.zeros((B,), jnp.float32)
+    neg_w = jnp.ones((B, M), jnp.float32)  # Σ_m q(im), unweighted as in Eq. 2
+    return contrastive_loss(theta_i, theta_pos, pos_w, m_tilde, theta_noise, neg_w)
+
+
+def nomad_loss(
+    theta_i,
+    theta_pos,
+    pos_w,
+    means,
+    counts,  # (K,) cell sizes (fp32 ok)
+    cell_of_i,  # (B,) own-cell id of each head (global numbering)
+    theta_neg,  # (B, S, d) samples drawn uniformly from the head's own cell
+    n_noise: int,  # |M|
+    n_total: int,  # N (support size of ξ per head; self-edges negligible at scale)
+    use_pallas: bool = False,
+):
+    """Eq. 3 with R̃ = all cells except the head's own (the paper's default).
+
+    M̃  = |M| Σ_{r≠c(i)} (|r|/N) q(i, μ_r)      — means, stop-gradded
+    M   = |M| (|c(i)|/N) mean_s q(i, m_s)      — exact in-cell samples
+    """
+    B, S, _ = theta_neg.shape
+    p_cell = counts.astype(jnp.float32) / float(n_total)  # (K,)
+    cell_w = float(n_noise) * p_cell  # (K,)
+    means = jax.lax.stop_gradient(means)
+    m_tilde = nomad_mean_term(theta_i, means, cell_w, cell_of_i, use_pallas)
+    p_own = p_cell[cell_of_i]  # (B,)
+    neg_w = jnp.broadcast_to((float(n_noise) * p_own / S)[:, None], (B, S))
+    return contrastive_loss(theta_i, theta_pos, pos_w, m_tilde, theta_neg, neg_w)

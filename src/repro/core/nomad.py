@@ -1,0 +1,260 @@
+"""NOMAD Projection driver (paper §3 end-to-end).
+
+``make_step_fn`` builds the jitted SGD step over a *local* cluster-major
+block of positions — the same function body serves the single-device
+reference (local = everything) and the ``shard_map`` distributed path
+(local = this shard's clusters, means/counts global). All index structures
+come from :mod:`repro.index.ann`.
+
+Method selection:
+* ``"nomad"``  — Eq. 3: remote cells via means (M̃), own cell sampled (M).
+* ``"infonc"`` — Eq. 2: the InfoNC-t-SNE baseline; all negatives drawn
+  uniformly from the full support (single-device only — this is exactly the
+  non-factorising loss the paper is working around).
+
+Sampling conventions (paper §3.3): heads i uniform over points (uniform
+marginal P_i); noise tails uniform over points (uniform ξ); |M| = n_noise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from typing import TYPE_CHECKING
+
+from repro.configs.base import NomadConfig
+from repro.core import losses
+from repro.core.pca import pca_init
+
+if TYPE_CHECKING:  # runtime import is lazy (repro.index imports repro.core)
+    from repro.index.ann import AnnIndex
+
+
+# ---------------------------------------------------------------------------
+# Sampling helpers (cluster-major layout)
+# ---------------------------------------------------------------------------
+
+
+def sample_points(key, n: int, cum_counts: jax.Array, capacity: int):
+    """n uniform valid points. Returns (rows, cluster_ids) — both (n,)."""
+    total = cum_counts[-1]
+    u = jax.random.randint(key, (n,), 0, total)
+    cluster = jnp.searchsorted(cum_counts, u, side="right").astype(jnp.int32)
+    start = jnp.where(cluster > 0, cum_counts[cluster - 1], 0)
+    slot = u - start
+    return cluster * capacity + slot, cluster
+
+
+def sample_in_cluster(key, cluster_ids: jax.Array, counts: jax.Array, capacity: int, s: int):
+    """(B,) cluster ids → (B, s) uniform valid rows within each cluster."""
+    B = cluster_ids.shape[0]
+    c = counts[cluster_ids]  # (B,)
+    u = jax.random.uniform(key, (B, s))
+    slot = jnp.floor(u * c[:, None]).astype(jnp.int32)
+    slot = jnp.minimum(slot, (c - 1)[:, None].astype(jnp.int32))
+    return cluster_ids[:, None] * capacity + slot
+
+
+def local_means(theta_rows: jax.Array, counts: jax.Array, capacity: int):
+    """Masked per-cluster means of positions: (K·C, d) → (K, d)."""
+    K = counts.shape[0]
+    th = theta_rows.reshape(K, capacity, -1).astype(jnp.float32)
+    valid = (jnp.arange(capacity)[None, :] < counts[:, None]).astype(jnp.float32)
+    sums = jnp.sum(th * valid[:, :, None], axis=1)
+    return sums / jnp.maximum(counts.astype(jnp.float32), 1.0)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# The SGD step
+# ---------------------------------------------------------------------------
+
+
+def make_step_fn(
+    cfg: NomadConfig,
+    *,
+    method: str = "nomad",
+    cluster_offset: int = 0,
+    n_total: Optional[int] = None,
+):
+    """Build ``step(theta, idx, state) -> (theta, loss)``.
+
+    ``idx`` is a dict of local index arrays; ``state`` carries (means,
+    global_counts, lr, key). ``cluster_offset`` maps local cluster ids into
+    the global cell numbering (shard s owns cells [off, off + K_local)).
+    """
+    n_total = n_total or cfg.n_points
+    B, S, Mn = cfg.batch_size, cfg.n_exact_negatives, cfg.n_noise
+    C = cfg.cluster_capacity
+
+    def step(theta, idx, means, global_counts, lr, key):
+        k_head, k_neg = jax.random.split(key)
+        rows, cl_local = sample_points(k_head, B, idx["cum_counts"], C)
+        pos_rows = idx["knn_idx"][rows]  # (B, k)
+        pos_w = idx["knn_w"][rows]  # (B, k)
+        th_i = theta[rows]
+        th_pos = theta[pos_rows]
+
+        if method == "infonc":
+            # Eq. 2 baseline: |M| noise tails uniform over the full support
+            neg_rows, _ = sample_points(k_neg, B * Mn, idx["cum_counts"], C)
+            neg_rows = neg_rows.reshape(B, Mn)
+            th_neg = theta[neg_rows]
+
+            def loss_fn(ti, tp, tn):
+                return losses.infonc_tsne_loss(ti, tp, pos_w, tn)
+
+        else:
+            neg_rows = sample_in_cluster(k_neg, cl_local, idx["counts"], C, S)
+            th_neg = theta[neg_rows]
+            cell_global = cl_local + cluster_offset
+
+            def loss_fn(ti, tp, tn):
+                return losses.nomad_loss(
+                    ti,
+                    tp,
+                    pos_w,
+                    means,
+                    global_counts,
+                    cell_global,
+                    tn,
+                    n_noise=Mn,
+                    n_total=n_total,
+                    use_pallas=cfg.use_pallas,
+                )
+
+        loss, (g_i, g_pos, g_neg) = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(
+            th_i, th_pos, th_neg
+        )
+        # sparse SGD: only touched rows are updated (reaction forces included)
+        theta = theta.at[rows].add(-lr * g_i)
+        theta = theta.at[pos_rows.reshape(-1)].add(-lr * g_pos.reshape(-1, theta.shape[1]))
+        theta = theta.at[neg_rows.reshape(-1)].add(-lr * g_neg.reshape(-1, theta.shape[1]))
+        return theta, loss
+
+    return step
+
+
+def make_epoch_fn(cfg: NomadConfig, step_fn, steps_per_epoch: int):
+    """jit-compiled epoch: refresh means once, then scan the SGD steps.
+
+    Mirrors Fig. 2: means are computed (and, in the distributed version,
+    all-gathered) once per epoch and held fixed (stop-gradient) within it.
+    ``mean_refresh_steps > 0`` refreshes more often (beyond-paper knob).
+    """
+    C = cfg.cluster_capacity
+    refresh = cfg.mean_refresh_steps or steps_per_epoch
+
+    @jax.jit
+    def epoch(theta, idx, lr0, lr1, epoch_key):
+        counts_f = idx["counts"].astype(jnp.float32)
+
+        def body(carry, t):
+            theta, means = carry
+            means = jax.lax.cond(
+                t % refresh == 0,
+                lambda th: local_means(th, idx["counts"], C),
+                lambda th: means,
+                theta,
+            )
+            lr = lr0 + (lr1 - lr0) * (t / steps_per_epoch)
+            key = jax.random.fold_in(epoch_key, t)
+            theta, loss = step_fn(theta, idx, means, counts_f, lr, key)
+            return (theta, means), loss
+
+        means0 = local_means(theta, idx["counts"], C)
+        (theta, _), losses_ = jax.lax.scan(
+            body, (theta, means0), jnp.arange(steps_per_epoch)
+        )
+        return theta, jnp.mean(losses_)
+
+    return epoch
+
+
+# ---------------------------------------------------------------------------
+# Fit driver (single-device reference; distributed lives in core/distributed)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FitResult:
+    embedding: np.ndarray  # (N, out_dim) in the original point order
+    index: "AnnIndex"
+    losses: list
+    wall_time_s: float
+    epoch_times: list
+
+
+class NomadProjection:
+    """scikit-style front end: ``NomadProjection(cfg).fit(x)``."""
+
+    def __init__(self, cfg: NomadConfig, method: str = "nomad"):
+        self.cfg = cfg
+        self.method = method
+
+    def fit(
+        self,
+        x: np.ndarray,
+        index: "Optional[AnnIndex]" = None,
+        callback: Optional[Callable] = None,
+    ) -> FitResult:
+        from repro.index.ann import build_index
+
+        cfg = self.cfg
+        t0 = time.time()
+        if index is None:
+            index = build_index(x, cfg)
+        theta = self._init_theta(x, index)
+
+        idx = {
+            "knn_idx": jnp.asarray(index.knn_idx, jnp.int32),
+            "knn_w": jnp.asarray(index.knn_w, jnp.float32),
+            "counts": jnp.asarray(index.counts, jnp.int32),
+            "cum_counts": jnp.asarray(np.cumsum(index.counts), jnp.int32),
+        }
+        steps = cfg.resolved_steps_per_epoch()
+        step_fn = make_step_fn(cfg, method=self.method)
+        epoch_fn = make_epoch_fn(cfg, step_fn, steps)
+
+        lr0 = cfg.resolved_lr0()
+        key = jax.random.key(cfg.seed + 1)
+        losses_, epoch_times = [], []
+        for e in range(cfg.n_epochs):
+            te = time.time()
+            frac0 = 1.0 - e / cfg.n_epochs
+            frac1 = 1.0 - (e + 1) / cfg.n_epochs
+            theta, mloss = epoch_fn(
+                theta, idx, lr0 * frac0, lr0 * frac1, jax.random.fold_in(key, e)
+            )
+            mloss = float(mloss)
+            losses_.append(mloss)
+            epoch_times.append(time.time() - te)
+            if callback is not None:
+                callback(e, np.asarray(theta), mloss)
+        emb = index.unpermute(np.asarray(theta))
+        return FitResult(
+            embedding=emb,
+            index=index,
+            losses=losses_,
+            wall_time_s=time.time() - t0,
+            epoch_times=epoch_times,
+        )
+
+    def _init_theta(self, x: np.ndarray, index: "AnnIndex") -> jax.Array:
+        cfg = self.cfg
+        if cfg.init == "pca":
+            th0 = np.asarray(pca_init(jnp.asarray(x), cfg.out_dim, cfg.init_scale))
+        else:
+            rng = np.random.default_rng(cfg.seed)
+            th0 = rng.normal(0, cfg.init_scale, (x.shape[0], cfg.out_dim)).astype(
+                np.float32
+            )
+        rows = np.zeros((index.n_clusters * index.capacity, cfg.out_dim), np.float32)
+        rows[index.perm] = th0
+        return jnp.asarray(rows)

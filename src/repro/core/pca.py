@@ -1,0 +1,35 @@
+"""PCA initialisation (paper §3.4, following Wang et al. [27]).
+
+Exact eigendecomposition of the D×D covariance for D ≤ 2048; randomized
+range-finder beyond that (the paper's corpora are 768–1024-d, so exact).
+The projection is rescaled so each output dim has std ``scale`` — the
+t-SNE convention from Belkina et al. [2] / Kobak & Berens.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pca_init(x: jax.Array, out_dim: int = 2, scale: float = 1e-4, max_exact_dim: int = 2048):
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    xc = x - mu
+    D = x.shape[1]
+    if D <= max_exact_dim:
+        cov = (xc.T @ xc) / x.shape[0]
+        evals, evecs = jnp.linalg.eigh(cov)
+        comps = evecs[:, ::-1][:, :out_dim]  # eigh is ascending
+    else:  # randomized power iteration
+        key = jax.random.key(17)
+        q = jax.random.normal(key, (D, out_dim + 8), jnp.float32)
+        for _ in range(4):
+            q = xc.T @ (xc @ q)
+            q, _ = jnp.linalg.qr(q)
+        b = xc @ q
+        _, _, vt = jnp.linalg.svd(b, full_matrices=False)
+        comps = (q @ vt.T)[:, :out_dim]
+    proj = xc @ comps
+    std = jnp.std(proj, axis=0, keepdims=True)
+    return proj / jnp.maximum(std, 1e-12) * scale

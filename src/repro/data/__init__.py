@@ -1,0 +1,3 @@
+from repro.data.synthetic import gaussian_mixture, hierarchical_mixture, swiss_roll
+
+__all__ = ["gaussian_mixture", "hierarchical_mixture", "swiss_roll"]

@@ -1,0 +1,57 @@
+"""Embedding-extraction bridge: model zoo → NOMAD Projection.
+
+The paper maps corpora embedded by external models (Nomic Embed, OpenCLIP,
+BGE-M3). Here any zoo architecture plays that role: run the model over
+token batches, mean-pool the final hidden states, and the resulting vectors
+feed ``NomadProjection`` (see examples/embed_and_map.py). This is the
+arch-applicability story of DESIGN.md §5: the assigned architectures are
+embedding *producers* for the paper's technique.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.models.layers import rms_norm
+
+
+def hidden_states(params, cfg: ArchConfig, tokens=None, embeds=None, patches=None):
+    """Forward pass returning the final-norm hidden states (B, S, D)."""
+    x = lm.embed_in(params, cfg, tokens=tokens, embeds=embeds, patches=patches)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    causal = not cfg.encoder_only
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.family == "hybrid":
+        body = lm._meta_block_body(cfg, positions, causal, with_cache=False)
+        (x, _), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+    else:
+        body = lm._homogeneous_body(cfg, positions, causal, with_cache=False)
+        (x, _), _ = jax.lax.scan(body, (x, aux0), params["layers"])
+    return rms_norm(x, params["final_ln"])
+
+
+def embed_corpus(
+    params,
+    cfg: ArchConfig,
+    token_batches,
+    *,
+    pool: str = "mean",
+) -> np.ndarray:
+    """Iterate token batches (B, S) → pooled vectors (N, D) on host."""
+    fwd = jax.jit(lambda p, t: hidden_states(p, cfg, tokens=t))
+    outs = []
+    for toks in token_batches:
+        h = fwd(params, jnp.asarray(toks))
+        if pool == "mean":
+            v = jnp.mean(h, axis=1)
+        elif pool == "last":
+            v = h[:, -1, :]
+        else:
+            raise ValueError(pool)
+        outs.append(np.asarray(v, np.float32))
+    return np.concatenate(outs, axis=0)

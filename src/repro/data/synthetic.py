@@ -1,0 +1,71 @@
+"""Synthetic corpora standing in for the paper's datasets.
+
+The paper maps embedding corpora (ArXiv/ImageNet/PubMed/Wikipedia vectors).
+Offline we use generators whose ground truth is known, so the quality
+metrics (NP@k, triplet accuracy) and multiscale structure checks are
+meaningful:
+
+* ``gaussian_mixture``     — ArXiv/ImageNet stand-in: well-separated
+  clusters on a hypersphere shell (embedding-like norm concentration).
+* ``hierarchical_mixture`` — Wikipedia stand-in: two-level cluster tree for
+  the Fig. 4 multiscale analysis (super-clusters of sub-clusters).
+* ``swiss_roll``           — classic manifold for local-structure sanity.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def gaussian_mixture(
+    n: int,
+    dim: int,
+    n_components: int = 10,
+    spread: float = 0.15,
+    seed: int = 0,
+):
+    """Returns (x (n, dim) float32, labels (n,) int64)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 1, (n_components, dim))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    labels = rng.integers(0, n_components, n)
+    x = centers[labels] + rng.normal(0, spread / np.sqrt(dim), (n, dim))
+    return x.astype(np.float32), labels
+
+
+def hierarchical_mixture(
+    n: int,
+    dim: int,
+    n_super: int = 6,
+    n_sub: int = 5,
+    super_spread: float = 0.35,
+    sub_spread: float = 0.06,
+    seed: int = 0,
+):
+    """Two-level tree: returns (x, super_labels, sub_labels)."""
+    rng = np.random.default_rng(seed)
+    supers = rng.normal(0, 1, (n_super, dim))
+    supers /= np.linalg.norm(supers, axis=1, keepdims=True)
+    subs = supers[:, None, :] + rng.normal(
+        0, super_spread / np.sqrt(dim), (n_super, n_sub, dim)
+    )
+    sup = rng.integers(0, n_super, n)
+    sub = rng.integers(0, n_sub, n)
+    x = subs[sup, sub] + rng.normal(0, sub_spread / np.sqrt(dim), (n, dim))
+    return x.astype(np.float32), sup, sup * n_sub + sub
+
+
+def swiss_roll(n: int, dim: int = 3, noise: float = 0.02, seed: int = 0):
+    """Swiss roll lifted into ``dim`` dimensions by a random rotation."""
+    rng = np.random.default_rng(seed)
+    t = 1.5 * np.pi * (1 + 2 * rng.random(n))
+    h = 21.0 * rng.random(n)
+    x3 = np.stack([t * np.cos(t), h, t * np.sin(t)], axis=1)
+    x3 = (x3 - x3.mean(0)) / x3.std(0)
+    x3 += rng.normal(0, noise, x3.shape)
+    if dim > 3:
+        q, _ = np.linalg.qr(rng.normal(0, 1, (dim, dim)))
+        x = x3 @ q[:3, :]
+    else:
+        x = x3
+    return x.astype(np.float32), t

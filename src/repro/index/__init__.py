@@ -1,0 +1,4 @@
+from repro.index.ann import AnnIndex, build_index
+from repro.index.kmeans import kmeans_fit, lsh_init_centroids
+
+__all__ = ["AnnIndex", "build_index", "kmeans_fit", "lsh_init_centroids"]

@@ -1,0 +1,115 @@
+"""ANN index builder: the end-to-end §3.2 pipeline.
+
+Produces the *cluster-major* layout every downstream consumer shares
+(single-device reference, shard_map distributed step, checkpointing):
+
+  row r = cluster * capacity + slot,  slot < counts[cluster] ⇒ real point
+
+Fields
+------
+x_rows     (K·C, D)   permuted input vectors (padding rows = 0)
+knn_idx    (K·C, k)   row indices of kNN tails (self-loop ⇒ masked edge)
+knn_w      (K·C, k)   p(j|i) weights (0 ⇒ edge absent)
+counts     (K,)       real points per cluster
+centroids  (K, D)
+perm       (N,)       original index → row (for un-permuting outputs)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import NomadConfig
+from repro.index import kmeans as km
+from repro.index.knn import batched_cluster_knn
+
+
+@dataclasses.dataclass
+class AnnIndex:
+    x_rows: np.ndarray
+    knn_idx: np.ndarray
+    knn_w: np.ndarray
+    counts: np.ndarray
+    centroids: np.ndarray
+    perm: np.ndarray
+    capacity: int
+    n_points: int
+
+    @property
+    def n_clusters(self) -> int:
+        return self.counts.shape[0]
+
+    @property
+    def valid_mask(self) -> np.ndarray:
+        K, C = self.n_clusters, self.capacity
+        return (np.arange(C)[None, :] < self.counts[:, None]).reshape(K * C)
+
+    def unpermute(self, rows: np.ndarray) -> np.ndarray:
+        """Map row-major data (K·C, …) back to original point order (N, …)."""
+        return rows[self.perm]
+
+
+def _np_dist2(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return (
+        np.sum(a.astype(np.float32) ** 2, -1)[:, None]
+        + np.sum(b.astype(np.float32) ** 2, -1)[None, :]
+        - 2.0 * a.astype(np.float32) @ b.astype(np.float32).T
+    )
+
+
+def build_index(x: np.ndarray, cfg: NomadConfig, use_pallas: bool | None = None) -> AnnIndex:
+    """K-means (LSH init) → capacity-bounded clusters → in-cluster exact kNN."""
+    if use_pallas is None:
+        use_pallas = cfg.use_pallas
+    n, d = x.shape
+    K, C, k = cfg.n_clusters, cfg.cluster_capacity, cfg.n_neighbors
+    if K * C < n:
+        raise ValueError(f"capacity {C}×{K} < N={n}; raise capacity_slack")
+    key = jax.random.key(cfg.seed)
+
+    cents, _, _ = km.kmeans_fit(
+        key, jnp.asarray(x), K, n_iters=cfg.kmeans_iters, tol=cfg.kmeans_tol, use_pallas=use_pallas
+    )
+    cents = np.asarray(cents)
+
+    assign = km.capacity_assign(_np_dist2, np.asarray(x), cents, C)
+
+    # build the cluster-major permutation
+    order = np.argsort(assign, kind="stable")
+    counts = np.bincount(assign, minlength=K).astype(np.int64)
+    starts = np.zeros(K, np.int64)
+    starts[1:] = np.cumsum(counts)[:-1]
+    perm = np.zeros(n, np.int64)  # original → row
+    x_rows = np.zeros((K * C, d), x.dtype)
+    for c in range(K):
+        members = order[starts[c] : starts[c] + counts[c]]
+        rows = c * C + np.arange(counts[c])
+        perm[members] = rows
+        x_rows[rows] = x[members]
+
+    valid = (np.arange(C)[None, :] < counts[:, None]).astype(bool)  # (K, C)
+    knn_local, knn_w = batched_cluster_knn(
+        jnp.asarray(x_rows).reshape(K, C, d), jnp.asarray(valid), k, use_pallas
+    )
+    knn_local = np.asarray(knn_local)  # (K, C, k) slot within cluster
+    knn_w = np.asarray(knn_w).reshape(K * C, k)
+    base = (np.arange(K) * C)[:, None, None]
+    knn_idx = (knn_local + base).reshape(K * C, k).astype(np.int64)
+    # dead edges (w == 0) point at self so gathers stay in-bounds & local
+    self_rows = np.arange(K * C)[:, None]
+    knn_idx = np.where(knn_w > 0, knn_idx, self_rows)
+
+    return AnnIndex(
+        x_rows=x_rows,
+        knn_idx=knn_idx,
+        knn_w=knn_w.astype(np.float32),
+        counts=counts,
+        centroids=cents,
+        perm=perm,
+        capacity=C,
+        n_points=n,
+    )

@@ -1,0 +1,199 @@
+"""LSH-initialised K-means (paper §3.2).
+
+The paper: "We initialize our K-Means clustering using a locally sensitive
+hash, run expectation maximization until convergence, and compute exact
+nearest neighbors for each point within its cluster."
+
+The E-step distance+argmin is served by the fused Pallas kernel
+(``repro.kernels.kmeans_assign``) when enabled; the jnp path is the oracle.
+A ``shard_map`` variant (`kmeans_fit_sharded`) runs EM with points sharded
+across devices — per-iteration communication is one psum of (K, D+1)
+partial statistics, the classic distributed-EM factorisation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def lsh_init_centroids(key, x: jax.Array, n_clusters: int) -> jax.Array:
+    """Random-hyperplane LSH buckets → bucket means as initial centroids.
+
+    b = ceil(log2 K) hyperplanes give 2^b ≥ K buckets; the K most populated
+    buckets seed the centroids; empty seats fall back to random points.
+    """
+    n, d = x.shape
+    b = max(1, int(np.ceil(np.log2(n_clusters))))
+    kh, kf = jax.random.split(key)
+    planes = jax.random.normal(kh, (d, b), jnp.float32)
+    bits = (x.astype(jnp.float32) @ planes) > 0  # (n, b)
+    codes = jnp.sum(bits * (2 ** jnp.arange(b, dtype=jnp.int32))[None, :], axis=1)
+    n_buckets = 2**b
+    sums = jnp.zeros((n_buckets, d), jnp.float32).at[codes].add(x.astype(jnp.float32))
+    cnts = jnp.zeros((n_buckets,), jnp.float32).at[codes].add(1.0)
+    order = jnp.argsort(-cnts)  # most populated first
+    top = order[:n_clusters]
+    cents = sums[top] / jnp.maximum(cnts[top], 1.0)[:, None]
+    # empty buckets → random data points
+    fallback = x[jax.random.randint(kf, (n_clusters,), 0, n)].astype(jnp.float32)
+    return jnp.where((cnts[top] > 0)[:, None], cents, fallback)
+
+
+def assign_jnp(x: jax.Array, cents: jax.Array, block: int = 16384):
+    """Nearest-centroid assignment; returns (assign (n,), min_dist2 (n,))."""
+    c2 = jnp.sum(jnp.square(cents), -1)
+
+    def one_block(xb):
+        d2 = (
+            jnp.sum(jnp.square(xb), -1)[:, None]
+            + c2[None, :]
+            - 2.0 * xb @ cents.T
+        )
+        return jnp.argmin(d2, -1).astype(jnp.int32), jnp.min(d2, -1)
+
+    n = x.shape[0]
+    if n <= block:
+        return one_block(x.astype(jnp.float32))
+    outs = [one_block(x[s : s + block].astype(jnp.float32)) for s in range(0, n, block)]
+    return jnp.concatenate([o[0] for o in outs]), jnp.concatenate([o[1] for o in outs])
+
+
+def _m_step(x, assign, n_clusters, old_cents):
+    sums = jnp.zeros((n_clusters, x.shape[1]), jnp.float32).at[assign].add(
+        x.astype(jnp.float32)
+    )
+    cnts = jnp.zeros((n_clusters,), jnp.float32).at[assign].add(1.0)
+    cents = sums / jnp.maximum(cnts, 1.0)[:, None]
+    return jnp.where((cnts > 0)[:, None], cents, old_cents), cnts
+
+
+def kmeans_fit(
+    key,
+    x: jax.Array,
+    n_clusters: int,
+    n_iters: int = 25,
+    tol: float = 1e-4,
+    use_pallas: bool = False,
+):
+    """Lloyd's EM from LSH init. Returns (centroids, assignments, counts)."""
+    cents = lsh_init_centroids(key, x, n_clusters)
+
+    if use_pallas:
+        from repro.kernels.kmeans_assign.ops import assign_nearest
+
+        assign_fn: Callable = lambda xx, cc: assign_nearest(xx, cc)
+    else:
+        assign_fn = assign_jnp
+
+    assign = None
+    for _ in range(n_iters):
+        assign, _ = assign_fn(x, cents)
+        new_cents, cnts = _m_step(x, assign, n_clusters, cents)
+        shift = float(jnp.max(jnp.sum(jnp.square(new_cents - cents), -1)))
+        cents = new_cents
+        if shift < tol:
+            break
+    assign, _ = assign_fn(x, cents)
+    _, cnts = _m_step(x, assign, n_clusters, cents)
+    return cents, assign, cnts
+
+
+def kmeans_fit_sharded(key, x_sharded, n_clusters, mesh, axis: str, n_iters: int = 25):
+    """Distributed EM: X rows sharded over ``axis``; psum of (K, D+1) stats.
+
+    x_sharded: global-view array already placed with rows sharded. Returns
+    replicated centroids. (Per-iteration collective: K×(D+1) fp32.)
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    d = x_sharded.shape[1]
+
+    cents0 = lsh_init_centroids(key, x_sharded, n_clusters)  # cheap, replicated
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(None, None)),
+        out_specs=P(None, None),
+        check_rep=False,
+    )
+    def em_iters(x_local, cents):
+        def body(cents, _):
+            a, _d = assign_jnp(x_local, cents)
+            sums = jnp.zeros((n_clusters, d), jnp.float32).at[a].add(
+                x_local.astype(jnp.float32)
+            )
+            cnts = jnp.zeros((n_clusters,), jnp.float32).at[a].add(1.0)
+            sums = jax.lax.psum(sums, axis)  # the one collective
+            cnts = jax.lax.psum(cnts, axis)
+            new = sums / jnp.maximum(cnts, 1.0)[:, None]
+            return jnp.where((cnts > 0)[:, None], new, cents), None
+
+        cents, _ = jax.lax.scan(body, cents, None, length=n_iters)
+        return cents
+
+    return em_iters(x_sharded, cents0)
+
+
+def capacity_assign(
+    dist2_fn,
+    x: np.ndarray,
+    cents: np.ndarray,
+    capacity: int,
+    max_rounds: int = 12,
+) -> np.ndarray:
+    """Capacity-bounded nearest-centroid assignment (host-side, NumPy).
+
+    TPU adaptation (DESIGN.md §2): static shapes need bounded clusters.
+    Greedy rounds: each unassigned point bids for its nearest centroid with
+    free capacity; each centroid admits its ``capacity`` closest bidders.
+    Terminates because every round either fills a centroid or assigns all.
+    """
+    n = x.shape[0]
+    K = cents.shape[0]
+    assign = np.full(n, -1, np.int64)
+    free = np.full(K, capacity, np.int64)
+    banned = np.zeros((n, K), bool)  # clusters already full when we bid
+
+    for _ in range(max_rounds):
+        todo = np.flatnonzero(assign < 0)
+        if todo.size == 0:
+            return assign
+        d2 = dist2_fn(x[todo], cents)  # (T, K)
+        d2 = np.where(banned[todo] | (free[None, :] <= 0), np.inf, d2)
+        pick = np.argmin(d2, 1)
+        for c in range(K):
+            if free[c] <= 0:
+                continue
+            bidders = todo[pick == c]
+            if bidders.size == 0:
+                continue
+            if bidders.size > free[c]:
+                order = np.argsort(d2[pick == c, c])
+                admitted = bidders[order[: free[c]]]
+                rejected = bidders[order[free[c] :]]
+                banned[rejected, c] = True
+            else:
+                admitted = bidders
+            assign[admitted] = c
+            free[c] -= admitted.size
+    # force-place any stragglers into the nearest centroid with space
+    todo = np.flatnonzero(assign < 0)
+    if todo.size:
+        d2 = dist2_fn(x[todo], cents)
+        order = np.argsort(d2, axis=1)
+        for t, row in zip(todo, order):
+            for c in row:
+                if free[c] > 0:
+                    assign[t] = c
+                    free[c] -= 1
+                    break
+    if (assign < 0).any():
+        raise RuntimeError("capacity_assign: total capacity < N")
+    return assign

@@ -1,0 +1,58 @@
+"""Exact within-cluster kNN + the inverse-rank edge weights (paper §3.2/Eq 6).
+
+Because neighbor candidates are confined to the point's own (padded) cluster
+block, every cluster is a connected component of the ANN graph — the paper's
+device-locality property for positive forces.
+
+The pairwise-distance matrix is served by the Pallas ``pairwise`` kernel
+(MXU form ‖x‖²+‖y‖²−2x·yᵀ) when enabled; jnp otherwise. Top-k and the rank
+matrix stay in jnp (sort-heavy, VPU-bound either way).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rank_model import edge_weights
+
+BIG = jnp.float32(1e30)
+
+
+def _pairwise_dist2_jnp(xb: jax.Array) -> jax.Array:
+    x2 = jnp.sum(jnp.square(xb), -1)
+    d2 = x2[:, None] + x2[None, :] - 2.0 * (xb @ xb.T)
+    return jnp.maximum(d2, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas"))
+def cluster_knn(
+    x_block: jax.Array,  # (C, D) one padded cluster
+    valid: jax.Array,  # (C,) real-point mask
+    k: int,
+    use_pallas: bool = False,
+):
+    """Returns (knn_idx (C, k) in-cluster slots, weights (C, k) fp32)."""
+    C = x_block.shape[0]
+    xb = x_block.astype(jnp.float32)
+    if use_pallas:
+        from repro.kernels.pairwise.ops import pairwise_dist2
+
+        d2 = pairwise_dist2(xb, xb)
+    else:
+        d2 = _pairwise_dist2_jnp(xb)
+    # mask padding and self for neighbor search
+    pad_mask = ~(valid[:, None] & valid[None, :])
+    search = d2 + pad_mask * BIG + jnp.eye(C, dtype=jnp.float32) * BIG
+    _, knn_idx = jax.lax.top_k(-search, k)  # (C, k) ascending distance
+    # ranks use the true distance matrix with padding pushed to the end
+    d2_ranked = d2 + pad_mask * BIG
+    w = edge_weights(d2_ranked, knn_idx, k, valid)
+    return knn_idx.astype(jnp.int32), w
+
+
+def batched_cluster_knn(x_blocks: jax.Array, valid: jax.Array, k: int, use_pallas=False):
+    """vmap over clusters: x_blocks (Kc, C, D), valid (Kc, C)."""
+    return jax.vmap(lambda xb, vb: cluster_knn(xb, vb, k, use_pallas))(x_blocks, valid)

@@ -1,0 +1,117 @@
+"""Fused Cauchy-vs-means Pallas TPU kernels (forward + backward).
+
+This is NOMAD's negative-force hot spot: every sampled head is repelled by
+all K cluster means (Eq. 4), a B×K Cauchy contraction executed every step.
+Fusing the weight construction (`|M|·p(m∈r)·[r ≠ own]`), the affinity and
+the reduction means the (B, K) intermediate never touches HBM — only
+θ (d×B), μ (d×K), w (K) stream in and s (B) streams out; arithmetic
+intensity is ~K/2 flops/byte, comfortably compute-bound on the VPU.
+
+Layout note (TPU adaptation): positions are passed transposed, (d, B) and
+(d, K) with d = 2, so the minor (lane) axis is the large one; the tiny d
+axis sits on sublanes. The (bb, bk) working tile lives in VMEM/VREGs only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dist2_tile(th, mu, d):
+    """th (d, bb), mu (d, bk) → (bb, bk) squared distances (d unrolled)."""
+    acc = None
+    for dd in range(d):
+        diff = th[dd, :, None] - mu[dd, None, :]
+        acc = diff * diff if acc is None else acc + diff * diff
+    return acc
+
+
+def _fwd_kernel(theta_ref, means_ref, w_ref, own_ref, out_ref, *, d, bk):
+    kstep = pl.program_id(1)
+
+    @pl.when(kstep == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    th = theta_ref[...]  # (d, bb)
+    mu = means_ref[...]  # (d, bk)
+    q = 1.0 / (1.0 + _dist2_tile(th, mu, d))  # (bb, bk)
+    bb = th.shape[1]
+    r_ids = kstep * bk + jax.lax.broadcasted_iota(jnp.int32, (bb, bk), 1)
+    own = own_ref[...]  # (1, bb)
+    mask = (own[0, :, None] != r_ids).astype(jnp.float32)
+    w = w_ref[...][0, None, :]  # (1, bk)
+    out_ref[0, :] += jnp.sum(q * w * mask, axis=1)
+
+
+def _bwd_kernel(theta_ref, means_ref, w_ref, own_ref, gbar_ref, gout_ref, *, d, bk):
+    kstep = pl.program_id(1)
+
+    @pl.when(kstep == 0)
+    def _init():
+        gout_ref[...] = jnp.zeros_like(gout_ref)
+
+    th = theta_ref[...]
+    mu = means_ref[...]
+    q = 1.0 / (1.0 + _dist2_tile(th, mu, d))
+    bb = th.shape[1]
+    r_ids = kstep * bk + jax.lax.broadcasted_iota(jnp.int32, (bb, bk), 1)
+    own = own_ref[...]  # (1, bb)
+    mask = (own[0, :, None] != r_ids).astype(jnp.float32)
+    factor = w_ref[...][0, None, :] * mask * q * q  # (bb, bk)
+    gbar = gbar_ref[...][0, :]  # (bb,)
+    for dd in range(d):
+        diff = th[dd, :, None] - mu[dd, None, :]
+        gout_ref[dd, :] += -2.0 * gbar * jnp.sum(factor * diff, axis=1)
+
+
+def _grids(B, K, bb, bk):
+    assert B % bb == 0 and K % bk == 0, (B, K, bb, bk)
+    return (B // bb, K // bk)
+
+
+def cauchy_mean_fwd_pallas(theta_t, means_t, w, own, *, bb=512, bk=1024, interpret=True):
+    """theta_t (d, B), means_t (d, K), w (1, K), own (1, B) → s (1, B)."""
+    d, B = theta_t.shape
+    K = means_t.shape[1]
+    bb, bk = min(bb, B), min(bk, K)
+    grid = _grids(B, K, bb, bk)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, d=d, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, bb), lambda i, kk: (0, i)),
+            pl.BlockSpec((d, bk), lambda i, kk: (0, kk)),
+            pl.BlockSpec((1, bk), lambda i, kk: (0, kk)),
+            pl.BlockSpec((1, bb), lambda i, kk: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bb), lambda i, kk: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, B), jnp.float32),
+        interpret=interpret,
+    )(theta_t, means_t, w, own)
+
+
+def cauchy_mean_bwd_pallas(theta_t, means_t, w, own, gbar, *, bb=512, bk=1024, interpret=True):
+    """Adds gbar: returns gθ (d, B)."""
+    d, B = theta_t.shape
+    K = means_t.shape[1]
+    bb, bk = min(bb, B), min(bk, K)
+    grid = _grids(B, K, bb, bk)
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, d=d, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, bb), lambda i, kk: (0, i)),
+            pl.BlockSpec((d, bk), lambda i, kk: (0, kk)),
+            pl.BlockSpec((1, bk), lambda i, kk: (0, kk)),
+            pl.BlockSpec((1, bb), lambda i, kk: (0, i)),
+            pl.BlockSpec((1, bb), lambda i, kk: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((d, bb), lambda i, kk: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((d, B), jnp.float32),
+        interpret=interpret,
+    )(theta_t, means_t, w, own, gbar)

@@ -1,0 +1,61 @@
+"""Public op: ``cauchy_weighted_sum`` with a custom VJP (both directions are
+Pallas kernels; means and weights are non-differentiable by the paper's
+design — means are refreshed by all-gather, not by gradient flow)."""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cauchy_mean.cauchy_mean import (
+    cauchy_mean_bwd_pallas,
+    cauchy_mean_fwd_pallas,
+)
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+BB, BK = 512, 1024
+
+
+def _pad_minor(a: jax.Array, mult: int, fill=0):
+    pad = (-a.shape[-1]) % mult
+    if pad:
+        filler = jnp.full(a.shape[:-1] + (pad,), fill, a.dtype)
+        a = jnp.concatenate([a, filler], axis=-1)
+    return a
+
+
+def _prep(theta_i, means, cell_w, own_cell):
+    B, d = theta_i.shape
+    bb, bk = min(BB, max(B, 8)), min(BK, max(means.shape[0], 128))
+    th = _pad_minor(theta_i.astype(jnp.float32).T, bb)  # (d, B')
+    mu = _pad_minor(means.astype(jnp.float32).T, bk)  # (d, K')
+    w = _pad_minor(cell_w.astype(jnp.float32)[None, :], bk)  # (1, K') pad w=0
+    own = _pad_minor(own_cell.astype(jnp.int32)[None, :], bb, fill=-1)
+    return th, mu, w, own, bb, bk, B
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def cauchy_weighted_sum(theta_i, means, cell_w, own_cell):
+    s, _ = _fwd(theta_i, means, cell_w, own_cell)
+    return s
+
+
+def _fwd(theta_i, means, cell_w, own_cell):
+    th, mu, w, own, bb, bk, B = _prep(theta_i, means, cell_w, own_cell)
+    s = cauchy_mean_fwd_pallas(th, mu, w, own, bb=bb, bk=bk, interpret=INTERPRET)
+    return s[0, :B], (theta_i, means, cell_w, own_cell)
+
+
+def _bwd(res, gbar):
+    theta_i, means, cell_w, own_cell = res
+    th, mu, w, own, bb, bk, B = _prep(theta_i, means, cell_w, own_cell)
+    gb = _pad_minor(gbar.astype(jnp.float32)[None, :], bb)
+    g = cauchy_mean_bwd_pallas(th, mu, w, own, gb, bb=bb, bk=bk, interpret=INTERPRET)
+    g_theta = g[:, :B].T.astype(theta_i.dtype)  # (B, d)
+    return (g_theta, None, None, None)
+
+
+cauchy_weighted_sum.defvjp(_fwd, _bwd)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused Cauchy-vs-means reduction (fwd + vjp)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cauchy_weighted_sum_ref(theta_i, means, cell_w, own_cell):
+    """s_b = Σ_r cell_w[r] · [own_cell[b] ≠ r] · q(θ_b, μ_r).
+
+    theta_i (B, d) fp32; means (K, d); cell_w (K,); own_cell (B,) int32.
+    """
+    th = theta_i.astype(jnp.float32)
+    mu = means.astype(jnp.float32)
+    d2 = jnp.sum(jnp.square(th[:, None, :] - mu[None, :, :]), axis=-1)  # (B, K)
+    q = 1.0 / (1.0 + d2)
+    K = means.shape[0]
+    mask = own_cell[:, None] != jnp.arange(K, dtype=own_cell.dtype)[None, :]
+    return jnp.sum(q * cell_w[None, :].astype(jnp.float32) * mask, axis=-1)
+
+
+def cauchy_weighted_sum_vjp_ref(theta_i, means, cell_w, own_cell, gbar):
+    """∂(gbar·s)/∂θ_b = gbar_b Σ_r w·mask·(−2)(θ_b−μ_r)·q²."""
+    th = theta_i.astype(jnp.float32)
+    mu = means.astype(jnp.float32)
+    diff = th[:, None, :] - mu[None, :, :]  # (B, K, d)
+    d2 = jnp.sum(jnp.square(diff), axis=-1)
+    q = 1.0 / (1.0 + d2)
+    K = means.shape[0]
+    mask = own_cell[:, None] != jnp.arange(K, dtype=own_cell.dtype)[None, :]
+    factor = cell_w[None, :].astype(jnp.float32) * mask * q * q  # (B, K)
+    return gbar[:, None].astype(jnp.float32) * (-2.0) * jnp.einsum("bk,bkd->bd", factor, diff)

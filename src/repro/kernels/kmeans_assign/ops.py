@@ -1,0 +1,33 @@
+"""Public op for the fused K-means E-step (padding-safe jit wrapper)."""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans_assign.kmeans_assign import assign_nearest_pallas
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k"))
+def assign_nearest(x, cents, block_n: int = 512, block_k: int = 256):
+    """x (N, D), cents (K, D) → (assign (N,) int32, min_d2 (N,) fp32)."""
+    n, k = x.shape[0], cents.shape[0]
+    bn, bk = min(block_n, max(n, 8)), min(block_k, max(k, 8))
+    pad_n = (-n) % bn
+    pad_k = (-k) % bk
+    xp = jnp.concatenate([x, jnp.zeros((pad_n, x.shape[1]), x.dtype)]) if pad_n else x
+    # padded centroids sit at +BIG distance so they are never selected
+    if pad_k:
+        far = jnp.full((pad_k, cents.shape[1]), 1e18, cents.dtype)
+        cp = jnp.concatenate([cents, far])
+    else:
+        cp = cents
+    arg, mind = assign_nearest_pallas(
+        xp.astype(jnp.float32), cp.astype(jnp.float32), block_n=bn, block_k=bk, interpret=INTERPRET
+    )
+    return arg[0, :n], mind[0, :n]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused K-means E-step (distance + argmin)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def assign_nearest_ref(x, cents):
+    """x (N, D), cents (K, D) → (assign (N,) int32, min_d2 (N,) fp32)."""
+    x = x.astype(jnp.float32)
+    c = cents.astype(jnp.float32)
+    d2 = (
+        jnp.sum(jnp.square(x), -1)[:, None]
+        + jnp.sum(jnp.square(c), -1)[None, :]
+        - 2.0 * x @ c.T
+    )
+    d2 = jnp.maximum(d2, 0.0)
+    return jnp.argmin(d2, -1).astype(jnp.int32), jnp.min(d2, -1)

@@ -1,0 +1,51 @@
+"""jit'd public wrapper: pads to block multiples, dispatches, slices back.
+
+``interpret=True`` on CPU (this container); on a real TPU the same call
+compiles the Mosaic kernel (set ``REPRO_PALLAS_INTERPRET=0``).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pairwise.pairwise import pairwise_dist2_pallas
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _pad_rows(a: jax.Array, mult: int) -> jax.Array:
+    pad = (-a.shape[0]) % mult
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros((pad,) + a.shape[1:], a.dtype)])
+    return a
+
+
+def _pad_cols(a: jax.Array, mult: int) -> jax.Array:
+    pad = (-a.shape[1]) % mult
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros((a.shape[0], pad), a.dtype)], axis=1)
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "block_d"))
+def pairwise_dist2(
+    x: jax.Array,
+    y: jax.Array,
+    block_n: int = 256,
+    block_m: int = 256,
+    block_d: int = 512,
+) -> jax.Array:
+    """(N, D) × (M, D) → (N, M) fp32 squared distances (padding-safe)."""
+    n, m = x.shape[0], y.shape[0]
+    bn, bm = min(block_n, max(n, 8)), min(block_m, max(m, 128))
+    xp = _pad_cols(_pad_rows(x.astype(jnp.float32), bn), block_d)
+    yp = _pad_cols(_pad_rows(y.astype(jnp.float32), bm), block_d)
+    bd = min(block_d, xp.shape[1])
+    out = pairwise_dist2_pallas(
+        xp, yp, block_n=bn, block_m=bm, block_d=bd, interpret=INTERPRET
+    )
+    return out[:n, :m]

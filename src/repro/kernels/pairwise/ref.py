@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the pairwise squared-distance kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_dist2_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """(N, D) × (M, D) → (N, M) squared euclidean distances, fp32."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    d2 = (
+        jnp.sum(jnp.square(x), -1)[:, None]
+        + jnp.sum(jnp.square(y), -1)[None, :]
+        - 2.0 * (x @ y.T)
+    )
+    return jnp.maximum(d2, 0.0)

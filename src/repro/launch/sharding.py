@@ -1,0 +1,271 @@
+"""Per-architecture sharding rules (DESIGN.md §6).
+
+Conventions on the production mesh (pod?, data, model):
+
+* FSDP (zero-3): every weight matrix shards its d_model-ish dim over
+  ``data``; optimizer moments follow their parameter.
+* TP over ``model``: attention H dim (wq/wo), MLP hidden F, vocab V.
+  kv projections are replicated over ``model`` (KV=8 < 16; redundant
+  compute is ~1% of FLOPs, zero comm — see DESIGN.md).
+* EP over ``model`` for MoE when E % model == 0 (llama4 16e, jamba 16e);
+  otherwise TP inside experts (mixtral 8e).
+* batch shards over (pod, data); for decode cells whose batch is smaller
+  than the axis, the cache length axis takes ``model`` (+ ``data`` for
+  long_500k) — distributed flash-decode / SP.
+* ``pod`` is pure DP for weights (replicated; grads all-reduce over pod).
+
+Rules are expressed as trailing-dimension specs matched on the flattened
+parameter path; leading (scan-stacked) dims are padded with None.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.optim.quantized import QTensor
+
+
+def _expert_parallel(cfg: ArchConfig, mesh: Mesh) -> bool:
+    return cfg.n_experts > 0 and cfg.n_experts % mesh.shape["model"] == 0
+
+
+def serving_weights_resident(cfg: ArchConfig, mesh: Mesh, budget_gib: float = 12.0) -> bool:
+    """Can bf16 weights live TP-only (no per-token FSDP gathers) on this mesh?"""
+    total = cfg.param_counts()["total"] * 2 / mesh.shape["model"]
+    return total <= budget_gib * 2**30
+
+
+def _param_rules(cfg: ArchConfig, mesh: Mesh, serving: bool = False):
+    """Ordered (substring(s), trailing-dims spec) rules.
+
+    ``serving``: decode wants weights resident — FSDP ("data") sharding
+    means an all-gather per generated token, which made every baseline
+    decode cell collective-bound (§Perf iteration 6). When the TP-sharded
+    weights fit the HBM budget we drop the data axis entirely; for the
+    100B+ MoE archs (llama4, jamba) the experts keep their data shard (the
+    gather cost is real and reported — serving them properly needs a wider
+    EP domain, which the multi-pod mesh's pod axis provides).
+    """
+    ep = _expert_parallel(cfg, mesh)
+    # dense (non-expert) weights: TP-only when serving (they always fit);
+    # expert weights: TP-only when the whole model fits, else (serving)
+    # weights-STATIONARY: E over model, F over data — tokens move, not
+    # weights (models/moe.py set_ep_mesh(stationary=True))
+    dd = None if serving else "data"
+    if serving and not serving_weights_resident(cfg, mesh) and ep:
+        moe_gu = ["model", None, "data"]
+        moe_d = ["model", "data", None]
+    else:
+        ed = None if (serving and serving_weights_resident(cfg, mesh)) else "data"
+        moe_gu = ["model", ed, None] if ep else [None, ed, "model"]
+        moe_d = ["model", None, ed] if ep else [None, "model", ed]
+    return [
+        # --- MoE (before generic mlp rules; 'moe' appears in the path) ----
+        (("moe", "router"), [dd, None]),
+        (("moe", "w_gate"), moe_gu),
+        (("moe", "w_up"), moe_gu),
+        (("moe", "w_down"), moe_d),
+        (("moe", "shared", "w_gate"), [dd, "model"]),
+        (("moe", "shared", "w_up"), [dd, "model"]),
+        (("moe", "shared", "w_down"), ["model", dd]),
+        # --- attention ------------------------------------------------------
+        (("wq",), [dd, "model", None]),
+        (("wk",), [dd, None, None]),
+        (("wv",), [dd, None, None]),
+        (("wo",), ["model", None, dd]),
+        # --- dense MLP ---------------------------------------------------------
+        (("w_gate",), [dd, "model"]),
+        (("w_up",), [dd, "model"]),
+        (("w_down",), ["model", dd]),
+        # --- SSM (split projections; see models/ssm.py sharding note) --------
+        (("w_z",), [dd, "model"]),
+        (("w_x",), [dd, "model"]),
+        (("w_b",), [dd, None]),
+        (("w_c",), [dd, None]),
+        (("w_dt",), [dd, "model"]),
+        (("w_out",), ["model", dd]),
+        (("conv_x",), [None, "model"]),
+        (("conv_b",), [None, None]),
+        (("conv_c",), [None, None]),
+        # --- embeddings / heads ---------------------------------------------------
+        (("embed",), ["model", dd]),
+        (("head",), [dd, "model"]),
+    ]
+
+
+def _match(path: str, keys) -> bool:
+    return all(k in path for k in keys)
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def param_pspec_tree(cfg: ArchConfig, mesh: Mesh, params, serving: bool = False):
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs).
+
+    The shared-expert rule must win over the generic MoE w_gate rule, so
+    rules are checked most-specific-first (more keys = more specific).
+    """
+    rules = sorted(_param_rules(cfg, mesh, serving), key=lambda r: -len(r[0]))
+
+    def leaf_spec(path, leaf):
+        p = _path_str(path)
+        ndim = len(leaf.shape)
+        for keys, trailing in rules:
+            if _match(p, keys):
+                spec = [None] * (ndim - len(trailing)) + list(trailing)
+                # guard: drop axis sharding on dims it does not divide,
+                # unless XLA padding is acceptable (model-TP dims only)
+                return P(*spec)
+        return P()  # norms, scalars, biases: replicated
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def opt_state_pspec_tree(cfg: ArchConfig, mesh: Mesh, opt_state):
+    """Moments follow their parameter (the path still names it: …/wq/m/q).
+
+    int8 payloads keep the parameter's shape → identical spec; per-row
+    scales drop the last axis → the parameter's spec minus its last entry.
+    This shape-transparency is what keeps the quantised optimizer sharded
+    (see optim/quantized.py — §Perf iteration 3).
+    """
+    rules = sorted(_param_rules(cfg, mesh), key=lambda r: -len(r[0]))
+
+    def leaf_spec(path, leaf):
+        p = _path_str(path)
+        if "count" in p:
+            return P()
+        is_scale = ".scale" in p
+        for keys, trailing in rules:
+            if _match(p, keys):
+                t = list(trailing)
+                if is_scale:  # shape = param.shape[:-1]
+                    spec = [None] * (len(leaf.shape) - (len(t) - 1)) + t[:-1]
+                else:
+                    spec = [None] * (len(leaf.shape) - len(t)) + t
+                return P(*spec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, opt_state)
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    """Input-batch shardings. Train batches arrive pre-split into
+    (accum, micro, …) so the microbatch scan never reshapes a sharded dim
+    (sharded reshapes make XLA SPMD insert all-gathers)."""
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    micro = shape.global_batch // (cfg.accum_steps if shape.kind == "train" else 1)
+    bdim = dp if micro % dp_size == 0 else (
+        "data" if micro % mesh.shape["data"] == 0 else None
+    )
+    lead = (None,) if shape.kind == "train" and cfg.accum_steps > 1 else ()
+    spec: dict = {}
+    if cfg.family == "audio":
+        spec["embeds"] = P(*lead, bdim, None, None)
+    elif cfg.family == "vlm":
+        spec["tokens"] = P(*lead, bdim, None)
+        spec["patches"] = P(*lead, bdim, None, None)
+    else:
+        spec["tokens"] = P(*lead, bdim, None)
+    if shape.kind == "train":
+        spec["labels"] = P(*lead, bdim, None)
+    return spec
+
+
+def cache_pspecs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, cache) -> dict:
+    """Decode-cache shardings. Batch takes (pod, data) when it divides;
+    otherwise the cache length axis takes over (SP / flash-decode)."""
+    dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    b = shape.global_batch
+    if b % dp_size == 0:
+        bspec, sspec = dp, "model"  # batch over DP axes, cache length over model
+    else:
+        bspec, sspec = None, (dp + ("model",))  # batch=1: length over everything
+
+    specs: dict = {"idx": P()}
+    if "k" in cache:
+        # (L_or_M, B, Sc, KV, hd)
+        specs["k"] = P(None, bspec, sspec, None, None)
+        specs["v"] = P(None, bspec, sspec, None, None)
+        specs["pos"] = P(sspec)
+    if "ssm_h" in cache:
+        nd = len(cache["ssm_h"].shape)
+        # (L, B, H, P, N) or (M, 7, B, H, P, N): heads over model
+        lead = [None] * (nd - 4)
+        specs["ssm_h"] = P(*lead, bspec, "model", None, None)
+        ndc = len(cache["ssm_tx"].shape)
+        leadc = [None] * (ndc - 3)
+        # x-tail channel dim = d_inner (model-divisible); B/C tails are N=128 wide
+        specs["ssm_tx"] = P(*leadc, bspec, None, "model")
+        specs["ssm_tb"] = P(*leadc, bspec, None, None)
+        specs["ssm_tc"] = P(*leadc, bspec, None, None)
+    return specs
+
+
+def step_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, specs):
+    """(in_shardings, out_shardings) for the step of this shape cell.
+
+    ``specs`` is the positional input_specs tuple from models.steps.
+    """
+
+    def ns(spec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    params = specs[0]
+    p_specs = param_pspec_tree(cfg, mesh, params)
+    if shape.kind == "train":
+        opt_state = specs[1]
+        o_specs = opt_state_pspec_tree(cfg, mesh, opt_state)
+        b_specs = batch_pspecs(cfg, shape, mesh)
+        in_sh = (ns(p_specs), ns(o_specs), ns(b_specs))
+        out_sh = (ns(p_specs), ns(o_specs), NamedSharding(mesh, P()))
+    elif shape.kind == "prefill":
+        b_specs = batch_pspecs(cfg, shape, mesh)
+        in_sh = (ns(p_specs), ns(b_specs))
+        # logits (B,1,V): batch over dp, vocab over model; cache like decode
+        cache_shape = ShapeConfig(shape.name, "decode", shape.seq_len, shape.global_batch)
+        dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+        dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+        bdim = dp if shape.global_batch % dp_size == 0 else None
+        logits_sh = NamedSharding(mesh, P(bdim, None, "model"))
+        out_sh = (logits_sh, None)  # prefill cache shardings: let XLA choose
+    else:  # decode — serving layout (weights TP-resident where they fit).
+        # batch=1 long-context decode keeps FSDP: with one token per step,
+        # per-device HBM time scales with resident weight bytes, and 256-way
+        # sharded weights + per-token gathers are cheaper than 16-way
+        # resident reads (ICI 50 GB/s loses to HBM 819 GB/s only when the
+        # batch amortises the gather — §Perf iteration 10).
+        # big-MoE decode always uses the stationary expert layout; dense
+        # batch-1 decode keeps FSDP (see note above); resident-class MoE at
+        # batch-1 (mixtral long_500k) still prefers resident over per-token
+        # expert gathers
+        serving = (
+            shape.global_batch >= mesh.shape["data"]
+            or (cfg.n_experts > 0 and cfg.n_experts % mesh.shape["model"] == 0)
+            or (cfg.n_experts > 0 and serving_weights_resident(cfg, mesh))
+        )
+        p_specs = param_pspec_tree(cfg, mesh, params, serving=serving)
+        cache = specs[1]
+        c_specs = cache_pspecs(cfg, shape, mesh, cache)
+        tok_sh = NamedSharding(mesh, P())
+        in_sh = (ns(p_specs), ns(c_specs), tok_sh)
+        dp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+        dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+        bdim = dp if shape.global_batch % dp_size == 0 else None
+        logits_sh = NamedSharding(mesh, P(bdim, None, "model"))
+        out_sh = (logits_sh, ns(c_specs))
+    return in_sh, out_sh

@@ -1,0 +1,186 @@
+"""NOMAD Projection end-to-end training launcher (deliverable b's driver).
+
+Fault-tolerant distributed fit:
+
+* index build (K-means + in-cluster kNN) is cached on disk next to the
+  checkpoint dir — on restart the index is reloaded, not rebuilt;
+* one checkpoint per ``--checkpoint-every`` epochs (atomic commit, async);
+* ``--resume`` restores θ + epoch + RNG stream and continues bit-exactly;
+* **elastic**: the checkpoint stores the global θ row-block, so a run
+  started on N devices restores onto any other divisor count (node loss →
+  restart smaller; scale-up → restart bigger). Cluster blocks re-shard
+  because the layout is cluster-major (checkpoint/checkpointer.py).
+
+Host-device simulation: ``--host-devices N`` forces N CPU devices (set
+before jax imports — this is why main() parses argv first).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --workload nomad_quickstart \
+      --host-devices 8 --mesh 2x4 --epochs 10 --checkpoint-dir /tmp/nomad_ckpt
+  … kill it mid-run, then:
+  PYTHONPATH=src python -m repro.launch.train --workload nomad_quickstart \
+      --host-devices 4 --mesh 4 --resume --checkpoint-dir /tmp/nomad_ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="nomad_quickstart")
+    ap.add_argument("--n-points", type=int, default=0, help="override workload size")
+    ap.add_argument("--epochs", type=int, default=0, help="override epoch count")
+    ap.add_argument("--mesh", default="", help="e.g. '2x4' (axes data,model) or '4'")
+    ap.add_argument("--host-devices", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--hierarchical", action="store_true")
+    ap.add_argument("--fail-at-epoch", type=int, default=-1, help="crash injection (tests)")
+    ap.add_argument("--out", default="", help="write final embedding .npy here")
+    ap.add_argument("--metrics", action="store_true", help="NP@10/triplet at the end")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices}"
+        )
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.checkpoint import Checkpointer, latest_step
+    from repro.configs import get_nomad
+    from repro.core.distributed import make_sharded_epoch_fn, shard_index_arrays
+    from repro.core.nomad import NomadProjection
+    from repro.data.synthetic import hierarchical_mixture
+    from repro.index.ann import build_index
+    from repro.launch.mesh import make_mesh
+
+    cfg = get_nomad(args.workload)
+    if args.n_points:
+        cfg = cfg.replace(n_points=args.n_points)
+    if args.epochs:
+        cfg = cfg.replace(n_epochs=args.epochs)
+    if args.hierarchical:
+        cfg = cfg.replace(hierarchical=True)
+
+    # ---- mesh ------------------------------------------------------------------
+    if args.mesh:
+        dims = tuple(int(d) for d in args.mesh.split("x"))
+    else:
+        dims = (len(jax.devices()),)
+    axis_names = {1: ("data",), 2: ("data", "model"), 3: ("pod", "data", "model")}[len(dims)]
+    mesh = make_mesh(dims, axis_names)
+    pod_axis = "pod" if "pod" in axis_names else None
+    shard_axes = tuple(a for a in axis_names if a != "pod")
+    n_shards = 1
+    for d in dims:
+        n_shards *= d
+    print(f"mesh {dims} axes {axis_names}; {n_shards} shards")
+
+    # ---- data + index (cached) ---------------------------------------------------
+    x, sup, sub = hierarchical_mixture(cfg.n_points, cfg.dim, seed=cfg.seed)
+    ckdir = args.checkpoint_dir
+    index = None
+    index_cache = os.path.join(ckdir, "index.npz") if ckdir else ""
+    if index_cache and os.path.exists(index_cache):
+        from repro.index.ann import AnnIndex
+
+        z = np.load(index_cache)
+        index = AnnIndex(
+            x_rows=z["x_rows"], knn_idx=z["knn_idx"], knn_w=z["knn_w"],
+            counts=z["counts"], centroids=z["centroids"], perm=z["perm"],
+            capacity=int(z["capacity"]), n_points=int(z["n_points"]),
+        )
+        print("index: restored from cache")
+    if index is None:
+        t0 = time.time()
+        index = build_index(x, cfg)
+        print(f"index: built in {time.time() - t0:.1f}s")
+        if index_cache:
+            os.makedirs(ckdir, exist_ok=True)
+            np.savez(
+                index_cache, x_rows=index.x_rows, knn_idx=index.knn_idx,
+                knn_w=index.knn_w, counts=index.counts, centroids=index.centroids,
+                perm=index.perm, capacity=index.capacity, n_points=index.n_points,
+            )
+
+    idx = shard_index_arrays(index, n_shards)
+    theta_np = np.asarray(NomadProjection(cfg)._init_theta(x, index))
+    start_epoch = 0
+
+    ckpt = None
+    if ckdir:
+        ckpt = Checkpointer(ckdir, n_shards=n_shards, keep=3, async_save=True)
+        if args.resume and latest_step(ckdir) is not None:
+            tree, meta = ckpt.restore({"theta": theta_np})
+            theta_np = tree["theta"]
+            start_epoch = int(meta["epoch"]) + 1
+            print(f"resume: epoch {start_epoch} (ckpt step {meta['epoch']})")
+
+    axes = ((pod_axis,) if pod_axis else ()) + shard_axes
+    row_sh = NamedSharding(mesh, P(axes, None))
+    vec_sh = NamedSharding(mesh, P(axes))
+    theta = jax.device_put(jnp.asarray(theta_np), row_sh)
+    idx = {
+        "knn_idx": jax.device_put(idx["knn_idx"], row_sh),
+        "knn_w": jax.device_put(idx["knn_w"], row_sh),
+        "counts": jax.device_put(idx["counts"], vec_sh),
+        "cum_counts": jax.device_put(idx["cum_counts"], vec_sh),
+    }
+    counts_global = jnp.asarray(index.counts, jnp.float32)
+
+    steps = max(1, -(-cfg.resolved_steps_per_epoch() // n_shards))
+    epoch_fn = jax.jit(
+        make_sharded_epoch_fn(
+            cfg, mesh, shard_axes=shard_axes, pod_axis=pod_axis,
+            steps_per_epoch=steps, n_shards=n_shards,
+        )
+    )
+    lr0 = cfg.resolved_lr0()
+    key = jax.random.key(cfg.seed + 1)
+    every = args.checkpoint_every or cfg.checkpoint_every_epochs
+
+    for e in range(start_epoch, cfg.n_epochs):
+        if e == args.fail_at_epoch:
+            print(f"CRASH INJECTION at epoch {e}", flush=True)
+            os._exit(17)
+        t0 = time.time()
+        f0 = 1.0 - e / cfg.n_epochs
+        f1 = 1.0 - (e + 1) / cfg.n_epochs
+        theta, ml = epoch_fn(
+            theta, idx, counts_global, lr0 * f0, lr0 * f1, jax.random.fold_in(key, e)
+        )
+        print(f"epoch {e:4d} loss {float(ml):.5f} ({time.time() - t0:.2f}s)", flush=True)
+        if ckpt and ((e + 1) % every == 0 or e == cfg.n_epochs - 1):
+            ckpt.save(e, {"theta": np.asarray(theta)}, sharded_keys=("theta",), metadata={"epoch": e})
+    if ckpt:
+        ckpt.wait()
+
+    emb = index.unpermute(np.asarray(theta))
+    if args.out:
+        np.save(args.out, emb)
+        print("embedding →", args.out)
+    if args.metrics:
+        from repro.metrics import neighborhood_preservation, random_triplet_accuracy
+
+        np10 = neighborhood_preservation(x, emb, k=10, n_queries=min(1000, cfg.n_points))
+        rta = random_triplet_accuracy(x, emb, 10_000)
+        print(f"NP@10={np10:.4f} triplet={rta:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,3 @@
+from repro.models import attention, layers, lm, moe, ssm, steps
+
+__all__ = ["attention", "layers", "lm", "moe", "ssm", "steps"]

@@ -1,0 +1,475 @@
+"""Model composition for all assigned architectures.
+
+One code path per *family topology*:
+
+* homogeneous decoder (dense / moe / ssm): ``lax.scan`` over L identical
+  layers with stacked parameters;
+* hybrid (Jamba): ``lax.scan`` over M = L/8 meta-blocks, each an unrolled
+  [attention, mamba×7] stack with MoE on odd positions (1:7 interleave,
+  MoE every second layer);
+* encoder (HuBERT): bidirectional homogeneous stack over stub frame
+  embeddings, untied classification head;
+* VLM (InternVL2): stub patch embeddings prepended to text embeddings,
+  causal LM over the combined sequence.
+
+All entry points are pure functions; ``init_params`` composes with
+``jax.eval_shape`` for the allocation-free dry-run.
+
+Cache layout (decode):
+  ``{"k": (L,B,Sc,kv,hd), "v": …, "pos": (Sc,), "idx": scalar,
+     "ssm_h": (L,B,H,P,N), "ssm_conv": (L,B,w-1,cd)}``
+with the unused members absent per family. For SWA archs (mixtral) the cache
+is a ring buffer of ``min(seq_len, window)`` slots; ``pos`` stores absolute
+positions so masking works across wraps.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import dtype_of, init_embedding, init_linear, init_swiglu, rms_norm, swiglu
+
+MOE_AUX_COEF = 0.01
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints
+# ---------------------------------------------------------------------------
+# XLA's sharding propagation solves a global assignment; without anchors it
+# sometimes replicates the batch to simplify an embedding gather (measured:
+# 16× activation blow-up on phi4 train_4k). The launcher pins activations to
+# (batch axes, None, None) here; tests/CPU runs leave it unset (no-op).
+
+_ACT_BATCH_AXES: "tuple | None" = None
+
+
+def set_activation_sharding(batch_axes) -> None:
+    """batch_axes: mesh axis (or tuple) for the batch dim, or None to clear."""
+    global _ACT_BATCH_AXES
+    _ACT_BATCH_AXES = batch_axes
+
+
+def _shard_act(x):
+    if _ACT_BATCH_AXES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(_ACT_BATCH_AXES, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+
+def _init_homogeneous_layer(key, cfg: ArchConfig, is_moe: bool, is_attn: bool) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg.param_dtype)
+    layer: dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), dt)}
+    if is_attn:
+        layer["attn"] = attn_lib.init_attention(ks[0], cfg)
+    else:
+        layer["ssm"] = ssm_lib.init_ssm(ks[0], cfg)
+    if cfg.d_ff:
+        layer["ln2"] = jnp.ones((cfg.d_model,), dt)
+        if is_moe:
+            layer["moe"] = moe_lib.init_moe(ks[1], cfg)
+        else:
+            layer["mlp"] = init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dt)
+    return layer
+
+
+def _init_meta_block(key, cfg: ArchConfig) -> dict:
+    """One Jamba meta-block: pos 0 = attention, pos 1..7 = mamba.
+
+    MLP at every position; MoE on odd positions (1,3,5,7), dense on even.
+    """
+    P = cfg.attn_period  # 8
+    dt = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, 4)
+    n_mamba = P - 1
+    n_moe = sum(1 for i in range(P) if i % cfg.moe_period == cfg.moe_offset)
+    n_dense = P - n_moe
+    mamba_keys = jax.random.split(keys[0], n_mamba)
+    moe_keys = jax.random.split(keys[1], n_moe)
+    dense_keys = jax.random.split(keys[2], n_dense)
+    D = cfg.d_model
+    return {
+        "attn_ln": jnp.ones((D,), dt),
+        "attn": attn_lib.init_attention(keys[3], cfg),
+        "mamba_ln": jnp.ones((n_mamba, D), dt),
+        "mamba": jax.vmap(lambda k: ssm_lib.init_ssm(k, cfg))(mamba_keys),
+        "moe_ln": jnp.ones((n_moe, D), dt),
+        "moe": jax.vmap(lambda k: moe_lib.init_moe(k, cfg))(moe_keys),
+        "dense_ln": jnp.ones((n_dense, D), dt),
+        "dense": jax.vmap(lambda k: init_swiglu(k, D, cfg.d_ff, dt))(dense_keys),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    params: dict[str, Any] = {}
+    if cfg.family == "audio":
+        # stub frontend supplies frame embeddings; no token embedding table
+        params["in_ln"] = jnp.ones((cfg.d_model,), dt)
+        params["head"] = init_linear(k_head, cfg.d_model, cfg.vocab_padded, dt)
+    else:
+        params["embed"] = init_embedding(k_emb, cfg.vocab_padded, cfg.d_model, dt)
+    if cfg.family == "hybrid":
+        M = cfg.n_layers // cfg.attn_period
+        keys = jax.random.split(k_layers, M)
+        params["blocks"] = jax.vmap(lambda k: _init_meta_block(k, cfg))(keys)
+    else:
+        is_moe = cfg.layer_is_moe(0)
+        is_attn = cfg.layer_is_attention(0)
+        keys = jax.random.split(k_layers, cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _init_homogeneous_layer(k, cfg, is_moe, is_attn)
+        )(keys)
+    params["final_ln"] = jnp.ones((cfg.d_model,), dt)
+    return params
+
+
+def abstract_params(cfg: ArchConfig) -> dict:
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Embedding in / logits out
+# ---------------------------------------------------------------------------
+
+
+def embed_in(params, cfg: ArchConfig, tokens=None, embeds=None, patches=None):
+    cd = dtype_of(cfg.compute_dtype)
+    if cfg.family == "audio":
+        return rms_norm(embeds.astype(cd), params["in_ln"])
+    x = params["embed"][tokens].astype(cd)
+    if cfg.family == "vlm":
+        x = jnp.concatenate([patches.astype(cd), x], axis=1)
+    return _shard_act(x)
+
+
+def logits_out(params, cfg: ArchConfig, x):
+    if cfg.family == "audio":
+        logits = (x @ params["head"]).astype(jnp.float32)
+    else:
+        logits = (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab_size:  # inert pad columns
+        neg = jnp.asarray(-1e30, jnp.float32)
+        pad_ok = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(pad_ok, logits, neg)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _homogeneous_body(cfg: ArchConfig, positions, causal, with_cache):
+    def body(carry, lp):
+        x, aux = carry
+        h = rms_norm(x, lp["ln1"])
+        cache_out = ()
+        if "attn" in lp:
+            a, (k, v) = attn_lib.attention_block(lp["attn"], h, positions, cfg, causal=causal)
+            x = x + a
+            if with_cache:
+                cache_out = (k, v)
+        else:
+            a, st = ssm_lib.ssm_block(lp["ssm"], h, cfg)
+            x = x + a
+            if with_cache:
+                cache_out = (st.h, st.tail_x, st.tail_b, st.tail_c)
+        if cfg.d_ff:
+            h = rms_norm(x, lp["ln2"])
+            if "moe" in lp:
+                y, moe_aux = moe_lib.moe_block(lp["moe"], h, cfg)
+                aux = aux + moe_aux
+            else:
+                y = swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+            x = x + y
+        return (_shard_act(x), aux), cache_out
+
+    return body
+
+
+def _meta_block_body(cfg: ArchConfig, positions, causal, with_cache):
+    P = cfg.attn_period
+
+    def mlp_at(x, bp, pos, counters, aux):
+        moe_i, dense_i = counters
+        if pos % cfg.moe_period == cfg.moe_offset:
+            h = rms_norm(x, bp["moe_ln"][moe_i])
+            mp = jax.tree.map(lambda a: a[moe_i], bp["moe"])
+            y, moe_aux = moe_lib.moe_block(mp, h, cfg)
+            return x + y, (moe_i + 1, dense_i), aux + moe_aux
+        h = rms_norm(x, bp["dense_ln"][dense_i])
+        dp = jax.tree.map(lambda a: a[dense_i], bp["dense"])
+        return x + swiglu(h, dp["w_gate"], dp["w_up"], dp["w_down"]), (moe_i, dense_i + 1), aux
+
+    def body(carry, bp):
+        x, aux = carry
+        # position 0: attention
+        h = rms_norm(x, bp["attn_ln"])
+        a, (k, v) = attn_lib.attention_block(bp["attn"], h, positions, cfg, causal=causal)
+        x = x + a
+        counters = (0, 0)
+        x, counters, aux = mlp_at(x, bp, 0, counters, aux)
+        sts = []
+        for pos in range(1, P):
+            h = rms_norm(x, bp["mamba_ln"][pos - 1])
+            mp = jax.tree.map(lambda a: a[pos - 1], bp["mamba"])
+            m, st = ssm_lib.ssm_block(mp, h, cfg)
+            x = x + m
+            if with_cache:
+                sts.append(st)
+            x, counters, aux = mlp_at(x, bp, pos, counters, aux)
+        cache_out = ()
+        if with_cache:
+            stacked = jax.tree.map(lambda *a: jnp.stack(a), *sts)
+            cache_out = (k, v, stacked.h, stacked.tail_x, stacked.tail_b, stacked.tail_c)
+        return (_shard_act(x), aux), cache_out
+
+    return body
+
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    tokens=None,
+    embeds=None,
+    patches=None,
+    *,
+    with_cache: bool = False,
+):
+    """Sequence forward. Returns (logits fp32, moe_aux, cache_stacked|None)."""
+    x = embed_in(params, cfg, tokens=tokens, embeds=embeds, patches=patches)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    causal = not cfg.encoder_only
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.family == "hybrid":
+        body = _meta_block_body(cfg, positions, causal, with_cache)
+        (x, aux), caches = jax.lax.scan(_maybe_remat(body, cfg), (x, aux0), params["blocks"])
+    else:
+        body = _homogeneous_body(cfg, positions, causal, with_cache)
+        (x, aux), caches = jax.lax.scan(_maybe_remat(body, cfg), (x, aux0), params["layers"])
+    x = rms_norm(x, params["final_ln"])
+    logits = logits_out(params, cfg, x)
+    return logits, aux, (caches if with_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def _decode_mlp(cfg: ArchConfig, x, bp, pos: int, counters, aux):
+    """MLP at meta-block position ``pos`` during decode (mirrors mlp_at)."""
+    moe_i, dense_i = counters
+    if pos % cfg.moe_period == cfg.moe_offset:
+        h = rms_norm(x, bp["moe_ln"][moe_i])
+        mp = jax.tree.map(lambda a: a[moe_i], bp["moe"])
+        y, moe_aux = moe_lib.moe_block(mp, h, cfg)
+        return x + y, (moe_i + 1, dense_i), aux + moe_aux
+    h = rms_norm(x, bp["dense_ln"][dense_i])
+    dp = jax.tree.map(lambda a: a[dense_i], bp["dense"])
+    return x + swiglu(h, dp["w_gate"], dp["w_up"], dp["w_down"]), (moe_i, dense_i + 1), aux
+
+
+def cache_capacity(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, filled: Optional[int] = None) -> dict:
+    """Zero cache with ``filled`` tokens marked valid (default: seq_len − 1)."""
+    cd = dtype_of(cfg.compute_dtype)
+    Sc = cache_capacity(cfg, seq_len)
+    filled = seq_len - 1 if filled is None else filled
+    cache: dict[str, Any] = {"idx": jnp.asarray(filled, jnp.int32)}
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    if cfg.family == "hybrid":
+        M = cfg.n_layers // cfg.attn_period
+        n_mamba = cfg.attn_period - 1
+        cache["k"] = jnp.zeros((M, batch, Sc, kv, hd), cd)
+        cache["v"] = jnp.zeros((M, batch, Sc, kv, hd), cd)
+        st = ssm_lib.init_ssm_state(cfg, batch)
+        for nm, leaf in zip(("ssm_h", "ssm_tx", "ssm_tb", "ssm_tc"), st):
+            cache[nm] = jnp.zeros((M, n_mamba) + leaf.shape, leaf.dtype)
+    elif cfg.family == "ssm":
+        st = ssm_lib.init_ssm_state(cfg, batch)
+        for nm, leaf in zip(("ssm_h", "ssm_tx", "ssm_tb", "ssm_tc"), st):
+            cache[nm] = jnp.zeros((cfg.n_layers,) + leaf.shape, leaf.dtype)
+    else:
+        cache["k"] = jnp.zeros((cfg.n_layers, batch, Sc, kv, hd), cd)
+        cache["v"] = jnp.zeros((cfg.n_layers, batch, Sc, kv, hd), cd)
+    if "k" in cache:
+        # absolute position of each slot (ring-aware); −big ⇒ never written
+        s = jnp.arange(Sc, dtype=jnp.int32)
+        if filled >= Sc:  # ring has wrapped: slot s holds the latest p≡s (mod Sc), p<filled
+            pos0 = filled - 1 - ((filled - 1 - s) % Sc)
+            valid = jnp.ones((Sc,), bool)
+        else:
+            pos0 = s
+            valid = s < filled
+        cache["pos"] = jnp.where(valid, pos0, -(2**30)).astype(jnp.int32)
+    return cache
+
+
+def load_cache_from_prefill(cfg: ArchConfig, cache: dict, stacked, n_tokens: int) -> dict:
+    """Copy prefill outputs (scan-stacked per layer) into a decode cache.
+
+    ``stacked`` is the cache tuple ``forward(..., with_cache=True)`` returns;
+    ``n_tokens`` is the prefill length. Handles the SWA ring buffer (only
+    the last ``Sc`` positions land, at their ring slots).
+    """
+    import numpy as np
+
+    if cfg.family == "hybrid":
+        k, v, hs, txs, tbs, tcs = stacked
+        cache = dict(cache)
+        cache["k"] = cache["k"].at[:, :, :n_tokens].set(k.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, :, :n_tokens].set(v.astype(cache["v"].dtype))
+        cache.update(ssm_h=hs, ssm_tx=txs, ssm_tb=tbs, ssm_tc=tcs)
+    elif cfg.family == "ssm":
+        hs, txs, tbs, tcs = stacked
+        cache = dict(cache, ssm_h=hs, ssm_tx=txs, ssm_tb=tbs, ssm_tc=tcs)
+    else:
+        k, v = stacked
+        Sc = cache["k"].shape[2]
+        cache = dict(cache)
+        if n_tokens > Sc:  # ring (SWA): keep the last Sc positions
+            sl = np.arange(n_tokens - Sc, n_tokens)
+            cache["k"] = cache["k"].at[:, :, sl % Sc].set(k[:, :, sl].astype(cache["k"].dtype))
+            cache["v"] = cache["v"].at[:, :, sl % Sc].set(v[:, :, sl].astype(cache["v"].dtype))
+        else:
+            cache["k"] = cache["k"].at[:, :, :n_tokens].set(k.astype(cache["k"].dtype))
+            cache["v"] = cache["v"].at[:, :, :n_tokens].set(v.astype(cache["v"].dtype))
+    return cache
+
+
+def decode_step(params, cfg: ArchConfig, cache: dict, token):
+    """One token: token (B, 1) int32 (or (B,1,D) embeds is not supported —
+    decode is LM-only). Returns (logits (B,1,V) fp32, new cache)."""
+    cd = dtype_of(cfg.compute_dtype)
+    B = token.shape[0]
+    x = params["embed"][token].astype(cd)
+    idx = cache["idx"]
+    pos = jnp.broadcast_to(idx, (B, 1)).astype(jnp.int32)
+
+    has_attn_cache = "k" in cache
+    if has_attn_cache:
+        Sc = cache["k"].shape[2]
+        slot = idx % Sc
+        new_pos = cache["pos"].at[slot].set(idx)
+        valid = jnp.broadcast_to(new_pos >= 0, (B, Sc))
+
+    def attn_step(ap, h, kc, vc):
+        q, k_new, v_new = attn_lib.qkv_project(ap, h, pos, cfg)
+        kc = kc.at[:, slot, :, :].set(k_new[:, 0])
+        vc = vc.at[:, slot, :, :].set(v_new[:, 0])
+        out = attn_lib.dispatch_attend_decode(q, kc, vc, pos, jnp.broadcast_to(new_pos, (B, Sc)), valid, window=cfg.sliding_window)
+        hm = attn_lib.head_mask(cfg)
+        if hm is not None:
+            out = out * hm[None, None, :, None].astype(out.dtype)
+        return jnp.einsum("bqhe,hed->bqd", out, ap.wo), kc, vc
+
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "hybrid":
+        P = cfg.attn_period
+
+        def body(carry, xs):
+            x, aux = carry
+            bp, kc, vc, st_stack = xs
+            h = rms_norm(x, bp["attn_ln"])
+            a, kc, vc = attn_step(bp["attn"], h, kc, vc)
+            x = x + a
+            counters = (0, 0)
+            x, counters, aux = _decode_mlp(cfg, x, bp, 0, counters, aux)
+            new_sts = []
+            for p_i in range(1, P):
+                h = rms_norm(x, bp["mamba_ln"][p_i - 1])
+                mp = jax.tree.map(lambda a: a[p_i - 1], bp["mamba"])
+                st = jax.tree.map(lambda a: a[p_i - 1], st_stack)
+                m, st2 = ssm_lib.ssm_decode_block(mp, h, cfg, st)
+                x = x + m
+                new_sts.append(st2)
+                x, counters, aux = _decode_mlp(cfg, x, bp, p_i, counters, aux)
+            stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_sts)
+            return (x, aux), (kc, vc, stacked)
+
+        st_in = ssm_lib.SSMState(
+            h=cache["ssm_h"], tail_x=cache["ssm_tx"], tail_b=cache["ssm_tb"], tail_c=cache["ssm_tc"]
+        )
+        (x, aux), (ks, vs, sts) = jax.lax.scan(
+            body, (x, aux0), (params["blocks"], cache["k"], cache["v"], st_in)
+        )
+        new_cache = dict(
+            cache, k=ks, v=vs, ssm_h=sts.h, ssm_tx=sts.tail_x, ssm_tb=sts.tail_b,
+            ssm_tc=sts.tail_c, idx=idx + 1, pos=new_pos,
+        )
+    elif cfg.family == "ssm":
+
+        def body(carry, xs):
+            x, aux = carry
+            lp, st = xs
+            h = rms_norm(x, lp["ln1"])
+            m, st2 = ssm_lib.ssm_decode_block(lp["ssm"], h, cfg, st)
+            x = x + m
+            return (x, aux), st2
+
+        st_in = ssm_lib.SSMState(
+            h=cache["ssm_h"], tail_x=cache["ssm_tx"], tail_b=cache["ssm_tb"], tail_c=cache["ssm_tc"]
+        )
+        (x, aux), sts = jax.lax.scan(body, (x, aux0), (params["layers"], st_in))
+        new_cache = dict(
+            cache, ssm_h=sts.h, ssm_tx=sts.tail_x, ssm_tb=sts.tail_b, ssm_tc=sts.tail_c,
+            idx=idx + 1,
+        )
+    else:
+
+        def body(carry, xs):
+            x, aux = carry
+            lp, kc, vc = xs
+            h = rms_norm(x, lp["ln1"])
+            a, kc, vc = attn_step(lp["attn"], h, kc, vc)
+            x = x + a
+            if cfg.d_ff:
+                h = rms_norm(x, lp["ln2"])
+                if "moe" in lp:
+                    y, moe_aux = moe_lib.moe_block(lp["moe"], h, cfg)
+                    aux = aux + moe_aux
+                else:
+                    y = swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+                x = x + y
+            return (x, aux), (kc, vc)
+
+        (x, aux), (ks, vs) = jax.lax.scan(
+            body, (x, aux0), (params["layers"], cache["k"], cache["v"])
+        )
+        new_cache = dict(cache, k=ks, v=vs, idx=idx + 1, pos=new_pos)
+
+    x = rms_norm(x, params["final_ln"])
+    logits = logits_out(params, cfg, x)
+    return logits, new_cache

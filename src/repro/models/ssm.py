@@ -1,0 +1,212 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+The sequence path uses the chunked SSD algorithm [arXiv:2405.21060]: within a
+chunk the recurrence is computed as a (Q×Q) masked, decay-weighted
+"attention" (MXU-friendly batched matmuls); across chunks a ``lax.scan``
+carries the (H, P, N) state. One scan iterates per chunk and computes both
+the intra-chunk quadratic term and the inter-chunk contribution, so live
+memory is O(B·H·Q·Q) and the HLO stays compact for the dry-run.
+
+Decode is the O(1) recurrence ``h ← exp(Δ·A)·h + Δ·B⊗x``.
+
+Sharding note (why the projections are split): the reference Mamba fuses
+z/x/B/C/Δ into one ``in_proj`` and slices the output. Slicing a
+tensor-sharded dimension at non-shard-aligned offsets makes XLA reshuffle,
+so each component has its own projection (mathematically identical), and
+the depthwise conv runs per component. The conv tails in the decode state
+stay per-component for the same reason (x tail sharded over heads via
+d_inner; B/C tails replicated — they are N=128 wide).
+
+Layout: x_heads (B, S, H, P), B/C (B, S, N) (single group), state (B, H, P, N).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import gated_rms_norm
+
+
+class SSMParams(NamedTuple):
+    w_z: jax.Array  # (D, di)
+    w_x: jax.Array  # (D, di)
+    w_b: jax.Array  # (D, N)
+    w_c: jax.Array  # (D, N)
+    w_dt: jax.Array  # (D, H)
+    conv_x: jax.Array  # (w, di)
+    conv_b: jax.Array  # (w, N)
+    conv_c: jax.Array  # (w, N)
+    conv_bias_x: jax.Array  # (di,)
+    conv_bias_b: jax.Array  # (N,)
+    conv_bias_c: jax.Array  # (N,)
+    A_log: jax.Array  # (H,) fp32
+    D: jax.Array  # (H,) fp32
+    dt_bias: jax.Array  # (H,) fp32
+    norm_w: jax.Array  # (di,)
+    w_out: jax.Array  # (di, D)
+
+
+class SSMState(NamedTuple):
+    h: jax.Array  # (B, H, P, N) fp32
+    tail_x: jax.Array  # (B, w-1, di)
+    tail_b: jax.Array  # (B, w-1, N)
+    tail_c: jax.Array  # (B, w-1, N)
+
+
+def init_ssm(key, cfg) -> SSMParams:
+    from repro.models.layers import dtype_of
+
+    dt_ = dtype_of(cfg.param_dtype)
+    D, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv
+    ks = jax.random.split(key, 9)
+    s = 1.0 / np.sqrt(D)
+    sw = 1.0 / np.sqrt(w)
+    return SSMParams(
+        w_z=(jax.random.normal(ks[0], (D, di)) * s).astype(dt_),
+        w_x=(jax.random.normal(ks[1], (D, di)) * s).astype(dt_),
+        w_b=(jax.random.normal(ks[2], (D, N)) * s).astype(dt_),
+        w_c=(jax.random.normal(ks[3], (D, N)) * s).astype(dt_),
+        w_dt=(jax.random.normal(ks[4], (D, H)) * s).astype(dt_),
+        conv_x=(jax.random.normal(ks[5], (w, di)) * sw).astype(dt_),
+        conv_b=(jax.random.normal(ks[6], (w, N)) * sw).astype(dt_),
+        conv_c=(jax.random.normal(ks[7], (w, N)) * sw).astype(dt_),
+        conv_bias_x=jnp.zeros((di,), dt_),
+        conv_bias_b=jnp.zeros((N,), dt_),
+        conv_bias_c=jnp.zeros((N,), dt_),
+        A_log=jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        D=jnp.ones((H,), jnp.float32),
+        dt_bias=jnp.log(jnp.expm1(jnp.full((H,), 1e-2))).astype(jnp.float32),  # softplus⁻¹
+        norm_w=jnp.ones((di,), dt_),
+        w_out=(jax.random.normal(ks[8], (di, D)) / np.sqrt(di)).astype(dt_),
+    )
+
+
+def init_ssm_state(cfg, batch: int) -> SSMState:
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    w = cfg.ssm_conv
+    return SSMState(
+        h=jnp.zeros((batch, H, P, N), jnp.float32),
+        tail_x=jnp.zeros((batch, w - 1, di), jnp.float32),
+        tail_b=jnp.zeros((batch, w - 1, N), jnp.float32),
+        tail_c=jnp.zeros((batch, w - 1, N), jnp.float32),
+    )
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, bias: jax.Array, tail):
+    """Depthwise causal conv width w over (B, S, C) with optional state tail.
+
+    Returns (silu(conv(u)), new tail (B, w-1, C))."""
+    width = w.shape[0]
+    B, S, C = u.shape
+    if tail is None:
+        tail = jnp.zeros((B, width - 1, C), u.dtype)
+    full = jnp.concatenate([tail.astype(u.dtype), u], axis=1)  # (B, S+w-1, C)
+    out = sum(full[:, i : i + S, :] * w[i] for i in range(width)) + bias
+    return jax.nn.silu(out), full[:, -(width - 1) :, :]
+
+
+def ssd_scan(x_h, B_mat, C_mat, dt, A, h0, chunk: int):
+    """Chunked SSD. x_h (B,S,H,P); B/C (B,S,N); dt (B,S,H) fp32; A (H,) fp32.
+
+    Returns (y (B,S,H,P) fp32, h_final (B,H,P,N) fp32).
+    """
+    Bsz, S, H, P = x_h.shape
+    N = B_mat.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, chunk)
+    nc = S // Q
+
+    xr = x_h.reshape(Bsz, nc, Q, H, P).astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+    Br = B_mat.reshape(Bsz, nc, Q, N).astype(jnp.float32).transpose(1, 0, 2, 3)
+    Cr = C_mat.reshape(Bsz, nc, Q, N).astype(jnp.float32).transpose(1, 0, 2, 3)
+    dtr = dt.reshape(Bsz, nc, Q, H).transpose(1, 0, 2, 3)
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(h, inp):
+        xc, Bc, Cc, dtc = inp  # (B,Q,H,P), (B,Q,N), (B,Q,N), (B,Q,H)
+        dA = dtc * A  # (B, Q, H), ≤ 0
+        cum = jnp.cumsum(dA, axis=1)  # inclusive cumsum over the chunk
+        # intra-chunk: scores[b,i,j,h] = (C_i·B_j)·exp(cum_i−cum_j)·dt_j, j≤i
+        CB = jnp.einsum("bin,bjn->bij", Cc, Bc)
+        decay = jnp.exp(jnp.clip(cum[:, :, None, :] - cum[:, None, :, :], -60.0, 0.0))
+        scores = CB[:, :, :, None] * decay * dtc[:, None, :, :]
+        scores = jnp.where(tri[None, :, :, None], scores, 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores, xc)
+        # inter-chunk: contribution of the carried state
+        in_decay = jnp.exp(jnp.clip(cum, -60.0, 0.0))  # exp(cum_i) (B,Q,H)
+        y_inter = jnp.einsum("bin,bhpn->bihp", Cc, h) * in_decay[:, :, :, None]
+        # chunk state: S_c = Σ_j exp(cum_Q − cum_j)·dt_j·(x_j ⊗ B_j)
+        out_decay = jnp.exp(jnp.clip(cum[:, -1:, :] - cum, -60.0, 0.0))  # (B,Q,H)
+        wdt = (out_decay * dtc)[..., None]  # (B,Q,H,1)
+        S_c = jnp.einsum("bjhp,bjn->bhpn", xc * wdt, Bc)
+        total = jnp.exp(jnp.clip(cum[:, -1, :], -60.0, 0.0))  # (B,H)
+        h_new = h * total[:, :, None, None] + S_c
+        return h_new, y_intra + y_inter
+
+    h_final, ys = jax.lax.scan(chunk_step, h0.astype(jnp.float32), (xr, Br, Cr, dtr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def _project(p: SSMParams, x: jax.Array, cfg, state: SSMState | None):
+    """x (B,S,D) → (z, xs, B_mat, C_mat, dt, new tails) — conv'd/activated."""
+    z = x @ p.w_z
+    dt = jax.nn.softplus((x @ p.w_dt).astype(jnp.float32) + p.dt_bias)  # (B,S,H)
+    xs, tx = _causal_conv(x @ p.w_x, p.conv_x, p.conv_bias_x, state.tail_x if state else None)
+    Bm, tb = _causal_conv(x @ p.w_b, p.conv_b, p.conv_bias_b, state.tail_b if state else None)
+    Cm, tc = _causal_conv(x @ p.w_c, p.conv_c, p.conv_bias_c, state.tail_c if state else None)
+    return z, xs, Bm, Cm, dt, (tx, tb, tc)
+
+
+def ssm_block(p: SSMParams, x: jax.Array, cfg, state: SSMState | None = None):
+    """Full-sequence Mamba-2 block. Returns (y (B,S,D), final SSMState)."""
+    B, S, D = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xs, Bm, Cm, dt, (tx, tb, tc) = _project(p, x, cfg, state)
+    xs = xs.reshape(B, S, H, P)
+    A = -jnp.exp(p.A_log)
+    h0 = state.h if state is not None else jnp.zeros((B, H, P, N), jnp.float32)
+    y, h_final = ssd_scan(xs, Bm, Cm, dt, A, h0, cfg.ssm_chunk)
+    y = y + p.D[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = gated_rms_norm(y, z, p.norm_w)
+    out = y @ p.w_out
+    new_state = SSMState(
+        h=h_final,
+        tail_x=tx.astype(jnp.float32),
+        tail_b=tb.astype(jnp.float32),
+        tail_c=tc.astype(jnp.float32),
+    )
+    return out, new_state
+
+
+def ssm_decode_block(p: SSMParams, x: jax.Array, cfg, state: SSMState):
+    """Single-token step. x: (B, 1, D) → (y (B,1,D), new state)."""
+    B = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xs, Bm, Cm, dt, (tx, tb, tc) = _project(p, x, cfg, state)
+    xs = xs[:, 0].reshape(B, H, P).astype(jnp.float32)
+    B_vec = Bm[:, 0].astype(jnp.float32)
+    C_vec = Cm[:, 0].astype(jnp.float32)
+    dt0 = dt[:, 0, :]  # (B, H)
+    A = -jnp.exp(p.A_log)
+    decay = jnp.exp(dt0 * A)  # (B, H)
+    h = state.h * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xs * dt0[..., None], B_vec
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h, C_vec) + p.D[None, :, None] * xs
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = gated_rms_norm(y, z, p.norm_w)
+    new_state = SSMState(
+        h=h,
+        tail_x=tx.astype(jnp.float32),
+        tail_b=tb.astype(jnp.float32),
+        tail_c=tc.astype(jnp.float32),
+    )
+    return y @ p.w_out, new_state

@@ -1,0 +1,180 @@
+"""Step functions: train (fwd+bwd+update, microbatched), prefill, decode.
+
+``input_specs(cfg, shape)`` returns ``jax.ShapeDtypeStruct`` stand-ins for
+every input of the step selected by the shape cell — the dry-run lowers
+against these, so nothing is allocated.
+
+Batch conventions (labels are pre-shifted targets):
+  LM / MoE / SSM / hybrid: {"tokens": (B,S) i32, "labels": (B,S) i32}
+  audio (HuBERT):          {"embeds": (B,S,D), "labels": (B,S) i32}
+  VLM (InternVL2):         {"tokens": (B,S−P) i32, "patches": (B,P,D),
+                            "labels": (B,S−P) i32}   (P = n_vision_patches)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import lm
+from repro.models.layers import dtype_of
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token CE; logits fp32 (B, S, V), labels (B, S) int32."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def make_loss_fn(cfg: ArchConfig):
+    def loss_fn(params, batch):
+        logits, aux, _ = lm.forward(
+            params,
+            cfg,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            patches=batch.get("patches"),
+        )
+        if cfg.family == "vlm":  # loss on text positions only
+            logits = logits[:, cfg.n_vision_patches :, :]
+        ce = cross_entropy(logits, batch["labels"])
+        loss = ce + MOE_AUX_COEF * aux if cfg.n_experts else ce
+        return loss, {"ce": ce, "moe_aux": aux}
+
+    return loss_fn
+
+
+MOE_AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Train step (with gradient accumulation)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, optimizer, *, microbatched: bool = False):
+    """``microbatched=True``: the batch arrives pre-split (accum, micro, …) —
+    the production path (reshaping a dp-sharded batch dim would make XLA
+    insert all-gathers; the host loader emits the split layout directly)."""
+    loss_fn = make_loss_fn(cfg)
+    accum = max(cfg.accum_steps, 1)
+    acc_dt = dtype_of(cfg.grad_accum_dtype)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            if microbatched:
+                batch = jax.tree.map(lambda x: x[0], batch)
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            if microbatched:
+                micro = batch
+            else:
+                micro = jax.tree.map(
+                    lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                    batch,
+                )
+
+            def micro_step(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gsum, g)
+                return (gsum, lsum + l), None
+
+            gz = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (gsum, lsum), _ = jax.lax.scan(micro_step, (gz, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / accum, gsum)
+            loss = lsum / accum
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        logits, _, cache = lm.forward(
+            params,
+            cfg,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            patches=batch.get("patches"),
+            with_cache=not cfg.encoder_only,
+        )
+        # serving wants the last-position logits + the cache for decode
+        return logits[:, -1:, :], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, cache, token):
+        return lm.decode_step(params, cfg, cache, token)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(
+    cfg: ArchConfig, shape: ShapeConfig, *, with_labels: bool, microbatched: bool = False
+) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    cd = dtype_of(cfg.compute_dtype)
+    lead: tuple = ()
+    if microbatched and shape.kind == "train" and cfg.accum_steps > 1:
+        assert B % cfg.accum_steps == 0, (B, cfg.accum_steps)
+        lead = (cfg.accum_steps,)
+        B = B // cfg.accum_steps
+    spec: dict[str, Any] = {}
+    if cfg.family == "audio":
+        spec["embeds"] = _sds(lead + (B, S, cfg.d_model), cd)
+    elif cfg.family == "vlm":
+        P = cfg.n_vision_patches
+        spec["tokens"] = _sds(lead + (B, S - P), jnp.int32)
+        spec["patches"] = _sds(lead + (B, P, cfg.d_model), cd)
+    else:
+        spec["tokens"] = _sds(lead + (B, S), jnp.int32)
+    if with_labels:
+        lab_len = S - cfg.n_vision_patches if cfg.family == "vlm" else S
+        spec["labels"] = _sds(lead + (B, lab_len), jnp.int32)
+    return spec
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, optimizer=None) -> tuple:
+    """Positional ShapeDtypeStruct args for the step of this shape cell."""
+    params = lm.abstract_params(cfg)
+    if shape.kind == "train":
+        assert optimizer is not None
+        opt_state = jax.eval_shape(optimizer.init, params)
+        return (
+            params,
+            opt_state,
+            batch_specs(cfg, shape, with_labels=True, microbatched=True),
+        )
+    if shape.kind == "prefill":
+        return (params, batch_specs(cfg, shape, with_labels=False))
+    # decode
+    token = _sds((shape.global_batch, 1), jnp.int32)
+    return (params, cache_specs(cfg, shape), token)

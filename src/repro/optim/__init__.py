@@ -1,0 +1,15 @@
+from repro.optim.schedules import constant, linear_decay, warmup_cosine
+from repro.optim.adamw import AdamW
+from repro.optim.sgd import SGD
+from repro.optim.quantized import quantize_int8, dequantize_int8, QTensor
+
+__all__ = [
+    "AdamW",
+    "SGD",
+    "constant",
+    "linear_decay",
+    "warmup_cosine",
+    "quantize_int8",
+    "dequantize_int8",
+    "QTensor",
+]

@@ -1,0 +1,71 @@
+"""AdamW with optional int8-quantised moments.
+
+State is a per-leaf pytree ``{"m": …, "v": …}`` plus a step counter. Leaves
+smaller than ``QUANT_MIN_SIZE`` keep fp32 moments regardless of policy
+(norm scales, per-head vectors — scales matter more than bytes there).
+The first moment is symmetric int8; the second moment is stored on a sqrt
+scale (strictly positive, dynamic range halves in log space).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.quantized import QTensor, dequantize_int8, maybe_dequantize, quantize_int8
+
+QUANT_MIN_SIZE = 65_536
+
+
+class AdamW(NamedTuple):
+    schedule: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"  # "float32" | "bfloat16" | "int8"
+
+    # -- API ------------------------------------------------------------------
+
+    def init(self, params) -> dict:
+        def one(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            if self.moment_dtype == "int8" and p.size >= QUANT_MIN_SIZE:
+                return {"m": quantize_int8(z), "v": quantize_int8(z, sqrt_scaled=True)}
+            dt = jnp.bfloat16 if self.moment_dtype == "bfloat16" else jnp.float32
+            return {"m": z.astype(dt), "v": z.astype(dt)}
+
+        return {"mu": jax.tree.map(one, params), "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, params, grads, state, *args):
+        count = state["count"] + 1
+        lr = self.schedule(count)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def one(p, g, mv):
+            g = g.astype(jnp.float32)
+            m = maybe_dequantize(mv["m"])
+            v = maybe_dequantize(mv["v"])
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                upd = upd + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            if isinstance(mv["m"], QTensor):
+                new_mv = {"m": quantize_int8(m), "v": quantize_int8(v, sqrt_scaled=True)}
+            else:
+                new_mv = {"m": m.astype(mv["m"].dtype), "v": v.astype(mv["v"].dtype)}
+            return new_p, new_mv
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_mv = treedef.flatten_up_to(state["mu"])
+        out = [one(p, g, mv) for p, g, mv in zip(flat_p, flat_g, flat_mv)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_mu = treedef.unflatten([o[1] for o in out])
+        return new_params, {"mu": new_mu, "count": count}

@@ -1,0 +1,67 @@
+"""Row-wise int8 quantisation for optimizer moments.
+
+At jamba-398B scale, fp32 Adam moments alone are 3.2 TB; int8 moments cut
+that 4×, which is the difference between fitting and not fitting 16 GB/chip.
+
+Layout (deliberately sharding-transparent — §Perf iteration 3): the int8
+payload keeps the **parameter's own shape** and scales are per-row over the
+last axis, so the moment tensors inherit the parameter's PartitionSpec
+unchanged. (The first version blocked the *flattened* tensor, and
+``reshape(-1)`` of a sharded dim forced XLA to replicate: measured 3.1 TiB
+per device on jamba train — the single worst memory bug of the baseline.)
+
+The second moment is stored on a sqrt scale: strictly positive, halves the
+dynamic range in log space, and v's per-row spread is what per-row scaling
+struggles with most.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    q: jax.Array  # int8, same shape as the original tensor
+    scale: jax.Array  # fp32, original shape minus the last axis
+    sqrt_scaled: bool = False  # payload encodes sqrt(x) of an x ≥ 0 tensor
+
+
+def quantize_int8(x: jax.Array, *, sqrt_scaled: bool = False) -> QTensor:
+    x = x.astype(jnp.float32)
+    if sqrt_scaled:
+        x = jnp.sqrt(jnp.maximum(x, 0.0))
+    absmax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+    return QTensor(q=q, scale=scale, sqrt_scaled=sqrt_scaled)
+
+
+def dequantize_int8(t: QTensor) -> jax.Array:
+    x = t.q.astype(jnp.float32) * t.scale[..., None]
+    if t.sqrt_scaled:
+        x = jnp.square(x)
+    return x
+
+
+def quantize_like(x: jax.Array, proto) -> "QTensor | jax.Array":
+    if isinstance(proto, QTensor):
+        return quantize_int8(x, sqrt_scaled=proto.sqrt_scaled)
+    return x.astype(proto.dtype)
+
+
+def maybe_dequantize(x) -> jax.Array:
+    return dequantize_int8(x) if isinstance(x, QTensor) else x.astype(jnp.float32)
+
+
+# key-aware registration so sharding rules can recognise ".scale" leaves
+jax.tree_util.register_pytree_with_keys(
+    QTensor,
+    lambda t: (
+        ((jax.tree_util.GetAttrKey("q"), t.q), (jax.tree_util.GetAttrKey("scale"), t.scale)),
+        (t.sqrt_scaled,),
+    ),
+    lambda aux, ch: QTensor(q=ch[0], scale=ch[1], sqrt_scaled=aux[0]),
+)

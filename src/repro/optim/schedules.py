@@ -1,0 +1,33 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def schedule(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return schedule
+
+
+def linear_decay(lr0: float, total_steps: int, floor: float = 0.0):
+    """The paper's schedule: lr0 annealed linearly to ``floor`` (default 0)."""
+
+    def schedule(step):
+        frac = 1.0 - jnp.minimum(step, total_steps) / max(total_steps, 1)
+        return jnp.asarray(floor + (lr0 - floor) * frac, jnp.float32)
+
+    return schedule
+
+
+def warmup_cosine(lr0: float, warmup: int, total_steps: int, floor_frac: float = 0.1):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr0 * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = lr0 * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos).astype(jnp.float32)
+
+    return schedule

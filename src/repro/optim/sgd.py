@@ -1,0 +1,39 @@
+"""SGD (+ optional momentum) — the paper's optimizer for NOMAD Projection."""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGD(NamedTuple):
+    schedule: Callable
+    momentum: float = 0.0
+
+    def init(self, params) -> dict:
+        state = {"count": jnp.zeros((), jnp.int32)}
+        if self.momentum:
+            state["velocity"] = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return state
+
+    def update(self, params, grads, state, *args):
+        count = state["count"] + 1
+        lr = self.schedule(count)
+        if self.momentum:
+            vel = jax.tree.map(
+                lambda v, g: self.momentum * v + g.astype(jnp.float32),
+                state["velocity"],
+                grads,
+            )
+            new_params = jax.tree.map(
+                lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype), params, vel
+            )
+            return new_params, {"count": count, "velocity": vel}
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params,
+            grads,
+        )
+        return new_params, {"count": count}

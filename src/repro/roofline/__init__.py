@@ -1,0 +1,4 @@
+from repro.roofline.hlo_cost import CostReport, analyze_hlo
+from repro.roofline.analysis import HW_V5E, roofline_terms, model_flops
+
+__all__ = ["CostReport", "analyze_hlo", "HW_V5E", "roofline_terms", "model_flops"]

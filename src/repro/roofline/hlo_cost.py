@@ -1,0 +1,405 @@
+"""Trip-count-aware HLO cost model.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis counts a
+``while`` body **once**, but every model here is scan-over-layers, so its
+numbers are off by ~n_layers (verified in tests against both XLA on
+loop-free graphs and analytic FLOPs on looped ones). This parser walks the
+post-optimisation, post-SPMD-partitioning HLO text and:
+
+* multiplies costs inside while bodies by the ``known_trip_count`` XLA
+  records on the while op (nested loops multiply);
+* counts dot FLOPs as 2·|out|·K (K from ``lhs_contracting_dims`` and the
+  lhs operand's shape, resolved through a module-wide symbol table — the
+  post-opt text references operands by name only);
+* approximates HBM traffic as operands+results at *fusion boundaries*
+  (ops inside a fused computation stay in registers; the fusion op's own
+  operands/results are the traffic);
+* sums wire bytes of every collective (all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute), per type — the module
+  is the per-partition program, so these are per-device bytes.
+
+This is a *model*, not a measurement: CPU fusion choices differ from TPU,
+which we accept and note in EXPERIMENTS.md (the relative deltas the perf
+loop optimises are robust to it; cross-checks live in tests/test_roofline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "and",
+    "or", "xor", "not", "compare", "select", "clamp", "convert", "floor",
+    "ceil", "round-nearest-afz", "sign", "cosine", "sine", "logistic",
+    "exponential-minus-one", "log-plus-one", "atan2", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "cbrt", "erf", "is-finite", "stochastic-convert", "tan",
+}
+_DATA_MOVERS = {
+    "copy", "copy-start", "transpose", "reshape", "broadcast", "slice",
+    "dynamic-slice", "dynamic-update-slice", "concatenate", "pad",
+    "reverse", "rng-bit-generator", "reduce", "scatter", "gather", "sort",
+}
+
+
+def _text_elems_bytes(text: str) -> Tuple[float, float]:
+    """Sum (elements, bytes) over every shape literal in ``text``."""
+    elems = 0.0
+    byts = 0.0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1.0
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _dims_of_first_shape(text: str) -> List[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class CostReport:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    coll_by_type: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_ops: float = 0.0
+    dot_flops: float = 0.0
+    unknown_trip_whiles: int = 0
+
+    def add(self, other: "CostReport", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.dot_flops += other.dot_flops * mult
+        self.coll_ops += other.coll_ops * mult
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+        for k, v in other.coll_by_type.items():
+            self.coll_by_type[k] = self.coll_by_type.get(k, 0.0) + v * mult
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    result: str  # result type text
+    opcode: str
+    operands: str  # operand list text (names; shapes resolved via symtab)
+    attrs: str
+
+
+_OP_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_SCALAR_TYPE_RE = re.compile(r"[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_CALL_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"(?:condition)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _parse_module(hlo: str):
+    """→ (computations: name → [ _Op ], symtab: op name → result type text)."""
+    comps: Dict[str, List[_Op]] = {}
+    symtab: Dict[str, str] = {}
+    cur: Optional[str] = None
+    ops: List[_Op] = []
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HEAD_RE.match(line)
+            if m:
+                cur = m.group(1)
+                ops = []
+            continue
+        if line.startswith("}"):
+            comps[cur] = ops
+            cur = None
+            continue
+        m = _OP_HEAD_RE.match(line)
+        if not m:
+            continue
+        name = m.group(1)
+        rest = line[m.end() :]
+        # result type: tuple (paren-matched — may contain /*index=N*/ comments)
+        # or a scalar/array type literal
+        if rest.startswith("("):
+            depth = 0
+            end = -1
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i + 1
+                        break
+            if end < 0:
+                continue
+            result, rest = rest[:end], rest[end:]
+        else:
+            m2 = _SCALAR_TYPE_RE.match(rest)
+            if not m2:
+                continue
+            result, rest = m2.group(0), rest[m2.end() :]
+        m3 = _OPCODE_RE.match(rest)
+        if not m3:
+            continue
+        opcode = m3.group(1)
+        rest = rest[m3.end() :]
+        depth = 1
+        operands, attrs = rest, ""
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    operands, attrs = rest[:i], rest[i + 1 :]
+                    break
+        op = _Op(name, result, opcode, operands, attrs)
+        ops.append(op)
+        symtab[name] = result
+    return comps, symtab
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)\s*\(", hlo, re.MULTILINE)
+    return m.group(1)
+
+
+def _trip_count(op: _Op) -> Optional[int]:
+    m = re.search(r"known_trip_count[^0-9]*([0-9]+)", op.attrs)
+    return int(m.group(1)) if m else None
+
+
+def analyze_hlo(hlo: str) -> CostReport:
+    comps, symtab = _parse_module(hlo)
+    entry = _entry_name(hlo)
+    memo: Dict[Tuple[str, bool], CostReport] = {}
+    adjust_memo: Dict[str, float] = {}
+
+    def fusion_slice_adjustment(name: str) -> float:
+        """Bytes to subtract from a fusion's operand bill: a fused
+        dynamic-slice of a *parameter* reads only the slice, not the whole
+        operand (scan bodies slice one layer out of the (L, …) weight/cache
+        stacks — billing the stack per trip overstated traffic ~L×)."""
+        if name in adjust_memo:
+            return adjust_memo[name]
+        local = {op.name: op for op in comps.get(name, ())}
+
+        def is_param_alias(nm: str, depth=0) -> bool:
+            op = local.get(nm)
+            if op is None or depth > 4:
+                return False
+            if op.opcode == "parameter":
+                return True
+            if op.opcode in ("bitcast", "copy", "convert", "transpose", "reshape"):
+                inner = _NAME_RE.findall(op.operands)
+                return bool(inner) and is_param_alias(inner[0], depth + 1)
+            return False
+
+        adj = 0.0
+        for op in comps.get(name, ()):
+            if op.opcode != "dynamic-slice":
+                continue
+            inner = _NAME_RE.findall(op.operands)
+            if inner and is_param_alias(inner[0]):
+                t = local.get(inner[0])
+                src = symtab.get(inner[0]) if t is None else t.result
+                if src:
+                    _, src_b = _text_elems_bytes(src)
+                    _, res_b = _text_elems_bytes(op.result)
+                    adj += max(src_b - res_b, 0.0)
+        adjust_memo[name] = adj
+        return adj
+
+    def operand_bytes(op: _Op) -> float:
+        total = 0.0
+        if _SHAPE_RE.search(op.operands):  # inline shapes (older dumps)
+            _, b = _text_elems_bytes(op.operands)
+            return b
+        for nm in _NAME_RE.findall(op.operands):
+            t = symtab.get(nm)
+            if t:
+                _, b = _text_elems_bytes(t)
+                total += b
+        return total
+
+    def dot_flops(op: _Op) -> float:
+        out_elems, _ = _text_elems_bytes(op.result)
+        names = _NAME_RE.findall(op.operands)
+        lhs_dims: List[int] = []
+        if _SHAPE_RE.search(op.operands):
+            lhs_dims = _dims_of_first_shape(op.operands)
+        elif names and names[0] in symtab:
+            lhs_dims = _dims_of_first_shape(symtab[names[0]])
+        mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+        k = 1.0
+        if mc and lhs_dims:
+            for idx in mc.group(1).split(","):
+                if idx:
+                    k *= lhs_dims[int(idx)]
+        return 2.0 * out_elems * k
+
+    def comp_cost(name: str, in_fusion: bool) -> CostReport:
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        memo[key] = CostReport()  # cycle guard
+        rep = CostReport()
+        for op in comps.get(name, ()):
+            oc = op.opcode
+            if oc == "fusion":
+                called = _CALL_RE.search(op.attrs)
+                if called:
+                    rep.add(comp_cost(called.group(1), True))
+                _, out_b = _text_elems_bytes(op.result)
+                if "dynamic-update-slice" in op.name or "dynamic_update_slice" in op.name:
+                    # in-place update fusions touch only the update region:
+                    # bill 2× the non-aliased operands (the slice being
+                    # written), not the whole carried buffer — scan-carried
+                    # stacks were otherwise billed n_layers× their size
+                    op_bytes = []
+                    for nm in _NAME_RE.findall(op.operands):
+                        t = symtab.get(nm)
+                        if t:
+                            _, b = _text_elems_bytes(t)
+                            op_bytes.append(b)
+                    if op_bytes:
+                        rep.bytes += 2.0 * (sum(op_bytes) - max(op_bytes))
+                    continue
+                bill = operand_bytes(op) + out_b
+                if called:
+                    bill -= fusion_slice_adjustment(called.group(1))
+                rep.bytes += max(bill, out_b)
+                continue
+            if oc == "while":
+                body = _CALL_RE.search(op.attrs)
+                cond = _COND_RE.search(op.attrs)
+                trips = _trip_count(op)
+                if trips is None:
+                    trips = 1
+                    rep.unknown_trip_whiles += 1
+                if body:
+                    rep.add(comp_cost(body.group(1), in_fusion), trips)
+                if cond:
+                    rep.add(comp_cost(cond.group(1), in_fusion), trips)
+                continue
+            if oc in ("call", "async-start", "custom-call-start"):
+                called = _CALL_RE.search(op.attrs)
+                if called:
+                    rep.add(comp_cost(called.group(1), in_fusion))
+                continue
+            if oc == "conditional":
+                names = _BRANCHES_RE.search(op.attrs)
+                if names:
+                    branch_reps = [
+                        comp_cost(n.strip().lstrip("%"), in_fusion)
+                        for n in names.group(1).split(",")
+                    ]
+                    if branch_reps:  # one branch executes: take the heaviest
+                        rep.add(max(branch_reps, key=lambda r: r.flops))
+                continue
+            if any(oc.startswith(c) for c in _COLLECTIVES):
+                if oc.endswith("-done"):
+                    continue  # counted at -start
+                base = next(c for c in _COLLECTIVES if oc.startswith(c))
+                in_b = operand_bytes(op)
+                _, out_b = _text_elems_bytes(op.result)
+                # wire model: AG counts gathered output, others input
+                wire = out_b if base == "all-gather" else in_b
+                rep.collective_bytes += wire
+                rep.coll_by_type[base] = rep.coll_by_type.get(base, 0.0) + wire
+                rep.coll_ops += 1
+                if not in_fusion:
+                    rep.bytes += in_b + out_b
+                continue
+            if oc in ("dot", "convolution"):
+                f = dot_flops(op)
+                rep.flops += f
+                rep.dot_flops += f
+                if not in_fusion:
+                    _, out_b = _text_elems_bytes(op.result)
+                    rep.bytes += operand_bytes(op) + out_b
+                continue
+            if oc == "custom-call":
+                if "matmul" in op.attrs or "dot" in op.attrs:
+                    f = dot_flops(op)
+                    rep.flops += f
+                    rep.dot_flops += f
+                if not in_fusion:
+                    _, out_b = _text_elems_bytes(op.result)
+                    rep.bytes += operand_bytes(op) + out_b
+                continue
+            if oc in _ELEMENTWISE:
+                out_e, _ = _text_elems_bytes(op.result)
+                rep.flops += out_e
+                continue
+            if oc in _DATA_MOVERS:
+                if oc == "reduce":
+                    in_e = 0.0
+                    for nm in _NAME_RE.findall(op.operands):
+                        t = symtab.get(nm)
+                        if t:
+                            e, _ = _text_elems_bytes(t)
+                            in_e += e
+                    rep.flops += in_e
+                if not in_fusion:
+                    _, out_b = _text_elems_bytes(op.result)
+                    if oc in ("slice", "dynamic-slice", "gather"):
+                        # reads only the sliced/gathered region, not the operand
+                        rep.bytes += 2.0 * out_b
+                    elif oc == "dynamic-update-slice":
+                        # in-place: touches only the update region (read+write)
+                        names = _NAME_RE.findall(op.operands)
+                        upd_b = 0.0
+                        if len(names) >= 2 and names[1] in symtab:
+                            _, upd_b = _text_elems_bytes(symtab[names[1]])
+                        rep.bytes += 2.0 * upd_b
+                    elif oc == "scatter":
+                        names = _NAME_RE.findall(op.operands)
+                        upd_b = 0.0
+                        if len(names) >= 3 and names[2] in symtab:
+                            _, upd_b = _text_elems_bytes(symtab[names[2]])
+                        rep.bytes += 2.0 * upd_b
+                    else:
+                        rep.bytes += operand_bytes(op) + out_b
+                continue
+            # parameter/constant/tuple/get-tuple-element/bitcast/iota: free
+        memo[key] = rep
+        return rep
+
+    if entry is None:
+        return CostReport()
+    total = CostReport()
+    total.add(comp_cost(entry, False))
+    return total

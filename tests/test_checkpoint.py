@@ -1,0 +1,67 @@
+"""Checkpointing: atomic commit, roundtrip, elastic resharding, pruning,
+async writer."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "theta": rng.normal(0, 1, (64, 2)).astype(np.float32),
+        "opt": {"count": np.asarray(7, np.int32), "vel": rng.normal(0, 1, (64, 2)).astype(np.float32)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), n_shards=4)
+    t = _tree()
+    ck.save(3, t, sharded_keys=("theta", "opt/vel"), metadata={"epoch": 3})
+    got, meta = ck.restore(t)
+    assert meta["epoch"] == 3
+    np.testing.assert_array_equal(got["theta"], t["theta"])
+    np.testing.assert_array_equal(got["opt"]["vel"], t["opt"]["vel"])
+    assert got["opt"]["count"] == 7
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_elastic_reshard(tmp_path):
+    """Written from 8 shards, restored for 2 — the elastic-scaling path."""
+    ck8 = Checkpointer(str(tmp_path), n_shards=8)
+    t = _tree(1)
+    ck8.save(0, t, sharded_keys=("theta",))
+    ck2 = Checkpointer(str(tmp_path), n_shards=2)
+    got, _ = ck2.restore(t)
+    np.testing.assert_array_equal(got["theta"], t["theta"])  # global view identical
+
+
+def test_atomic_no_tmp_left_and_pruning(tmp_path):
+    ck = Checkpointer(str(tmp_path), n_shards=2, keep=2)
+    t = _tree(2)
+    for step in range(5):
+        ck.save(step, t, sharded_keys=("theta",))
+    names = sorted(os.listdir(tmp_path))
+    assert not any(n.endswith(".tmp") for n in names)
+    steps = [n for n in names if n.startswith("step_")]
+    assert len(steps) == 2 and steps[-1].endswith("4".zfill(9))
+
+
+def test_async_save_joins(tmp_path):
+    ck = Checkpointer(str(tmp_path), n_shards=2, async_save=True)
+    t = _tree(3)
+    ck.save(0, t, sharded_keys=("theta",))
+    ck.save(1, t, sharded_keys=("theta",))  # implicitly joins save 0
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 1
+    got, _ = ck.restore(t)
+    np.testing.assert_array_equal(got["theta"], t["theta"])
+
+
+def test_restore_missing_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        ck.restore({"a": np.zeros(3)})

@@ -1,0 +1,126 @@
+"""Per-kernel validation: shape/dtype sweeps, allclose vs the ref.py oracles,
+custom-VJP correctness vs jax.grad of the oracle (assignment requirement c).
+
+All Pallas kernels run in interpret mode on CPU (the TPU lowering is the
+same kernel body with ``REPRO_PALLAS_INTERPRET=0``).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.pairwise.ops import pairwise_dist2
+from repro.kernels.pairwise.ref import pairwise_dist2_ref
+from repro.kernels.cauchy_mean.ops import cauchy_weighted_sum
+from repro.kernels.cauchy_mean.ref import (
+    cauchy_weighted_sum_ref,
+    cauchy_weighted_sum_vjp_ref,
+)
+from repro.kernels.kmeans_assign.ops import assign_nearest
+from repro.kernels.kmeans_assign.ref import assign_nearest_ref
+
+
+# ---------------------------------------------------------------------------
+# pairwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m,d", [(256, 256, 64), (512, 256, 128), (100, 300, 33), (8, 1024, 512), (257, 129, 17)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_matches_ref(n, m, d, dtype):
+    kx, ky = jax.random.split(jax.random.key(n * m + d))
+    x = jax.random.normal(kx, (n, d), dtype)
+    y = jax.random.normal(ky, (m, d), dtype)
+    got = pairwise_dist2(x, y)
+    want = pairwise_dist2_ref(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_pairwise_zero_distance_diagonal():
+    x = jax.random.normal(jax.random.key(0), (64, 16), jnp.float32)
+    d2 = np.asarray(pairwise_dist2(x, x))
+    assert np.all(np.abs(np.diag(d2)) < 1e-4)
+    assert np.all(d2 >= 0)
+
+
+# ---------------------------------------------------------------------------
+# cauchy_mean (forward + custom VJP)
+# ---------------------------------------------------------------------------
+
+
+def _cauchy_inputs(B, K, d, seed=0):
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(seed), 4)
+    theta = jax.random.normal(k1, (B, d), jnp.float32) * 3.0
+    means = jax.random.normal(k2, (K, d), jnp.float32) * 3.0
+    w = jax.random.uniform(k3, (K,), jnp.float32)
+    own = jax.random.randint(k4, (B,), 0, K)
+    return theta, means, w, own
+
+
+@pytest.mark.parametrize("B,K,d", [(512, 1024, 2), (100, 64, 2), (1024, 4096, 2), (64, 100, 3), (777, 333, 2)])
+def test_cauchy_mean_forward_matches_ref(B, K, d):
+    theta, means, w, own = _cauchy_inputs(B, K, d, seed=B + K)
+    got = cauchy_weighted_sum(theta, means, w, own)
+    want = cauchy_weighted_sum_ref(theta, means, w, own)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,K,d", [(256, 512, 2), (100, 64, 2), (64, 100, 3)])
+def test_cauchy_mean_vjp_matches_autodiff_of_ref(B, K, d):
+    theta, means, w, own = _cauchy_inputs(B, K, d, seed=7 * B + K)
+
+    def f_kernel(th):
+        return jnp.sum(jnp.sin(cauchy_weighted_sum(th, means, w, own)))
+
+    def f_ref(th):
+        return jnp.sum(jnp.sin(cauchy_weighted_sum_ref(th, means, w, own)))
+
+    g_kernel = jax.grad(f_kernel)(theta)
+    g_ref = jax.grad(f_ref)(theta)
+    np.testing.assert_allclose(np.asarray(g_kernel), np.asarray(g_ref), rtol=1e-4, atol=1e-6)
+
+
+def test_cauchy_mean_vjp_ref_matches_formula():
+    theta, means, w, own = _cauchy_inputs(128, 64, 2, seed=3)
+    gbar = jax.random.normal(jax.random.key(9), (128,), jnp.float32)
+    want = jax.vjp(lambda th: cauchy_weighted_sum_ref(th, means, w, own), theta)[1](gbar)[0]
+    got = cauchy_weighted_sum_vjp_ref(theta, means, w, own, gbar)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-7)
+
+
+def test_cauchy_mean_excludes_own_cell():
+    """Moving the own-cell mean must not change the output."""
+    theta, means, w, own = _cauchy_inputs(32, 16, 2, seed=5)
+    s1 = cauchy_weighted_sum(theta, means, w, own)
+    means2 = means.at[own[0]].add(100.0)
+    s2 = cauchy_weighted_sum(theta, means2, w, own)
+    assert float(jnp.abs(s1[0] - s2[0])) < 1e-6
+    assert float(jnp.max(jnp.abs(s1[1:] - s2[1:]))) > 0  # others do change
+
+
+# ---------------------------------------------------------------------------
+# kmeans_assign
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,k,d", [(512, 256, 64), (1000, 17, 32), (64, 512, 128), (513, 255, 48)])
+def test_kmeans_assign_matches_ref(n, k, d):
+    kx, kc = jax.random.split(jax.random.key(n + k))
+    x = jax.random.normal(kx, (n, d), jnp.float32)
+    cents = jax.random.normal(kc, (k, d), jnp.float32)
+    a_got, d_got = assign_nearest(x, cents)
+    a_want, d_want = assign_nearest_ref(x, cents)
+    np.testing.assert_allclose(np.asarray(d_got), np.asarray(d_want), rtol=1e-4, atol=1e-4)
+    # argmin ties can differ between tilings; assert distance-equivalence
+    d_of_got = np.take_along_axis(
+        np.asarray(pairwise_dist2_ref(x, cents)), np.asarray(a_got)[:, None], 1
+    )[:, 0]
+    np.testing.assert_allclose(d_of_got, np.asarray(d_want), rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_assign_exact_on_centroids():
+    cents = jax.random.normal(jax.random.key(1), (32, 16), jnp.float32) * 5
+    a, d = assign_nearest(cents, cents)
+    np.testing.assert_array_equal(np.asarray(a), np.arange(32))
+    assert float(jnp.max(d)) < 1e-3

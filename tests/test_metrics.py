@@ -1,0 +1,40 @@
+"""Metric sanity: identity embeddings score 1.0; random embeddings score at
+chance; metrics are monotone in corruption."""
+
+import numpy as np
+
+from repro.data.synthetic import gaussian_mixture
+from repro.metrics import neighborhood_preservation, random_triplet_accuracy
+
+
+def test_identity_scores_one():
+    x, _ = gaussian_mixture(400, 8, seed=0)
+    assert neighborhood_preservation(x, x.copy(), k=10, n_queries=200) == 1.0
+    assert random_triplet_accuracy(x, x.copy(), 5000) == 1.0
+
+
+def test_isometry_scores_one():
+    x, _ = gaussian_mixture(300, 4, seed=1)
+    y = x * 3.0 + 7.0  # distance-order preserving
+    assert neighborhood_preservation(x, y, k=10, n_queries=150) == 1.0
+    assert random_triplet_accuracy(x, y, 4000) == 1.0
+
+
+def test_random_embedding_at_chance():
+    rng = np.random.default_rng(2)
+    x, _ = gaussian_mixture(500, 16, seed=2)
+    y = rng.normal(0, 1, (500, 2)).astype(np.float32)
+    np10 = neighborhood_preservation(x, y, k=10, n_queries=300)
+    assert np10 < 0.08  # chance ≈ k/N = 0.02, generous margin
+    rta = random_triplet_accuracy(x, y, 10000)
+    assert 0.4 < rta < 0.6
+
+
+def test_corruption_monotonicity():
+    x, _ = gaussian_mixture(400, 8, seed=3)
+    rng = np.random.default_rng(3)
+    scores = []
+    for noise in (0.0, 0.5, 5.0):
+        y = x[:, :2] + rng.normal(0, noise, (400, 2)).astype(np.float32)
+        scores.append(random_triplet_accuracy(x, y, 8000))
+    assert scores[0] >= scores[1] >= scores[2] - 0.02

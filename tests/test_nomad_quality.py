@@ -1,0 +1,78 @@
+"""End-to-end NOMAD quality gates on synthetic data (single device, fast):
+the map must beat chance by a wide margin, clusters must separate, the
+InfoNC-t-SNE baseline must run, and the fit must be deterministic."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import NomadConfig
+from repro.core.nomad import NomadProjection
+from repro.data.synthetic import gaussian_mixture, hierarchical_mixture
+from repro.metrics import neighborhood_preservation, random_triplet_accuracy
+from repro.metrics.neighborhood import _topk_neighbors
+
+CFG = NomadConfig(
+    n_points=5000,
+    dim=32,
+    n_clusters=8,
+    n_neighbors=15,
+    n_noise=32,
+    n_exact_negatives=8,
+    batch_size=512,
+    n_epochs=25,
+    use_pallas=False,
+)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x, labels = gaussian_mixture(5000, 32, n_components=8, seed=0)
+    res = NomadProjection(CFG).fit(x)
+    return x, labels, res
+
+
+def test_quality_beats_chance(fitted):
+    x, labels, res = fitted
+    emb = res.embedding
+    assert np.isfinite(emb).all()
+    np10 = neighborhood_preservation(x, emb, k=10, n_queries=500)
+    assert np10 > 10 * (10 / 5000), np10  # ≥10× chance
+    rta = random_triplet_accuracy(x, emb, 10_000)
+    assert rta > 0.6, rta
+
+
+def test_cluster_separation(fitted):
+    x, labels, res = fitted
+    emb = res.embedding
+    nb = np.asarray(_topk_neighbors(jnp.asarray(emb[:500]), jnp.asarray(emb), 10))
+    purity = np.mean(labels[nb] == labels[:500, None])
+    assert purity > 0.9, purity
+
+
+def test_fit_deterministic():
+    x, _ = gaussian_mixture(2000, 16, n_components=4, seed=1)
+    cfg = CFG.replace(n_points=2000, dim=16, n_clusters=4, n_epochs=5)
+    r1 = NomadProjection(cfg).fit(x)
+    r2 = NomadProjection(cfg).fit(x, index=r1.index)
+    np.testing.assert_array_equal(r1.embedding, r2.embedding)
+
+
+def test_infonc_baseline_runs_and_optimizes():
+    x, _ = gaussian_mixture(2000, 16, n_components=4, seed=2)
+    cfg = CFG.replace(n_points=2000, dim=16, n_clusters=4, n_epochs=10)
+    res = NomadProjection(cfg, method="infonc").fit(x)
+    assert np.isfinite(res.embedding).all()
+    rta = random_triplet_accuracy(x, res.embedding, 8000)
+    assert rta > 0.55, rta
+
+
+def test_multiscale_structure():
+    """Fig. 4 analogue: super-cluster structure must survive in 2-D."""
+    x, sup, sub = hierarchical_mixture(4000, 24, n_super=4, n_sub=3, seed=3)
+    cfg = CFG.replace(n_points=4000, dim=24, n_clusters=8, n_epochs=25)
+    res = NomadProjection(cfg).fit(x)
+    emb = res.embedding
+    nb = np.asarray(_topk_neighbors(jnp.asarray(emb[:400]), jnp.asarray(emb), 10))
+    sup_purity = np.mean(sup[nb] == sup[:400, None])
+    assert sup_purity > 0.8, sup_purity

@@ -1,0 +1,94 @@
+"""Sharding-rule tests: every parameter/optimizer/batch/cache spec must
+divide the production mesh — cheap static checks that catch regressions
+without compiling (the dry-run is the integration test)."""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    opt_state_pspec_tree,
+    param_pspec_tree,
+)
+from repro.models import lm, steps
+from repro.optim import AdamW, constant
+
+
+class FakeMesh:
+    shape = {"data": 16, "model": 16}
+
+
+class FakeMeshPod:
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+def _check_divisibility(tree, specs, mesh_shape, where):
+    leaves = jax.tree.leaves(tree)
+    spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves), where
+    for leaf, spec in zip(leaves, spec_leaves):
+        assert isinstance(spec, P), (where, spec)
+        assert len(spec) <= len(leaf.shape), (where, spec, leaf.shape)
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([mesh_shape[a] for a in axes]))
+            assert dim % total == 0, (where, leaf.shape, spec, dim, total)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_and_opt_specs_divide_mesh(name):
+    cfg = ARCHS[name]
+    params = lm.abstract_params(cfg)
+    specs = param_pspec_tree(cfg, FakeMesh, params)
+    _check_divisibility(params, specs, FakeMesh.shape, f"{name}/params")
+    opt = AdamW(schedule=constant(1e-4), moment_dtype=cfg.opt_moment_dtype)
+    opt_state = jax.eval_shape(opt.init, params)
+    ospecs = opt_state_pspec_tree(cfg, FakeMesh, opt_state)
+    _check_divisibility(opt_state, ospecs, FakeMesh.shape, f"{name}/opt")
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+@pytest.mark.parametrize("mesh", [FakeMesh, FakeMeshPod])
+def test_batch_and_cache_specs_divide_mesh(name, mesh):
+    cfg = ARCHS[name]
+    for sname in cfg.supported_shapes():
+        shape = SHAPES[sname]
+        b = batch_specs_tree = steps.batch_specs(
+            cfg, shape, with_labels=shape.kind == "train", microbatched=True
+        )
+        specs = batch_pspecs(cfg, shape, mesh)
+        _check_divisibility(b, specs, mesh.shape, f"{name}/{sname}/batch")
+        if shape.kind == "decode":
+            cache = steps.cache_specs(cfg, shape)
+            cspecs = cache_pspecs(cfg, shape, mesh, cache)
+            for k_ in cache:
+                _check_divisibility(
+                    cache[k_], cspecs[k_], mesh.shape, f"{name}/{sname}/cache[{k_}]"
+                )
+
+
+def test_tp_attention_heads_padded():
+    cfg = ARCHS["phi4-mini-3.8b"]
+    assert cfg.n_heads == 24 and cfg.n_heads_padded == 32
+    cfg = ARCHS["yi-34b"]
+    assert cfg.n_heads == 56 and cfg.n_heads_padded == 64
+    cfg = ARCHS["jamba-1.5-large-398b"]
+    assert cfg.n_heads_padded == cfg.n_heads == 64  # already divisible
+    # padding preserves kv-group structure: Hp/KV ≥ H/KV, integer
+    for c in ARCHS.values():
+        if c.n_heads:
+            assert c.n_heads_padded % max(c.n_kv_heads, 1) == 0
+            assert c.n_heads_padded % 16 == 0
+
+
+def test_vocab_padding():
+    assert ARCHS["mamba2-2.7b"].vocab_padded % 256 == 0
+    assert ARCHS["hubert-xlarge"].vocab_padded == 512
+    assert ARCHS["mixtral-8x7b"].vocab_padded == 32000  # already divisible
