@@ -1,58 +1,96 @@
-"""Pallas-kernel micro-benchmarks (interpret mode on CPU: these wall-times
-track correctness-path overhead, not TPU performance — the TPU story is the
-dry-run roofline; this harness exists to catch algorithmic regressions and
-to compare kernel vs oracle at equal shapes)."""
+"""Registry-driven Pallas kernel micro-benchmarks.
+
+Enumerates :mod:`repro.kernels.registry` — every registered kernel is timed
+on its declared ``bench_shapes`` working point, Pallas path vs jnp oracle
+at equal shapes. On CPU the Pallas path runs in interpret mode, so these
+wall-times track correctness-path overhead, not TPU performance — the TPU
+story is the dry-run roofline; this harness exists to catch algorithmic
+regressions and so that *new* kernels get timed the moment they register.
+
+  PYTHONPATH=src python benchmarks/kernel_micro.py            # run + CSV
+  PYTHONPATH=src python benchmarks/kernel_micro.py --list     # enumerate
+  PYTHONPATH=src python benchmarks/kernel_micro.py --autotune # sweep grids
+"""
 
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.kernels.cauchy_mean.ops import cauchy_weighted_sum
-from repro.kernels.cauchy_mean.ref import cauchy_weighted_sum_ref
-from repro.kernels.kmeans_assign.ops import assign_nearest
-from repro.kernels.kmeans_assign.ref import assign_nearest_ref
-from repro.kernels.pairwise.ops import pairwise_dist2
-from repro.kernels.pairwise.ref import pairwise_dist2_ref
+from repro.kernels import autotune, registry
 
 
 def _time(fn, *args, reps=3):
-    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))  # compile
     t0 = time.time()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.time() - t0) / reps * 1e6
 
 
+def _shape_label(sig) -> str:
+    """Lossless: one dims-group per argument — "1024x256-1024x256"."""
+    return "-".join("x".join(str(d) for d in shape) for shape, _dt in sig)
+
+
 def run(quick: bool = False):
+    """[(name, us_per_call, derived), …] — one pallas + one oracle row per
+    registered kernel (benchmarks/run.py contract)."""
+    del quick  # bench_shapes are already CI-sized
     rows = []
-    k1, k2 = jax.random.split(jax.random.key(0))
-
-    x = jax.random.normal(k1, (1024, 256))
-    y = jax.random.normal(k2, (1024, 256))
-    rows.append(("kernel/pairwise_1024x1024x256", _time(pairwise_dist2, x, y), "interpret"))
-    rows.append(("kernel/pairwise_ref", _time(jax.jit(pairwise_dist2_ref), x, y), "oracle"))
-
-    B, K = 2048, 2048
-    th = jax.random.normal(k1, (B, 2))
-    mu = jax.random.normal(k2, (K, 2))
-    w = jnp.ones((K,))
-    own = jnp.zeros((B,), jnp.int32)
-    rows.append(("kernel/cauchy_mean_2048x2048", _time(cauchy_weighted_sum, th, mu, w, own), "interpret"))
-    rows.append(
-        ("kernel/cauchy_mean_ref", _time(jax.jit(cauchy_weighted_sum_ref), th, mu, w, own), "oracle")
-    )
-
-    xs = jax.random.normal(k1, (4096, 128))
-    cs = jax.random.normal(k2, (256, 128))
-    rows.append(("kernel/kmeans_assign_4096x256", _time(assign_nearest, xs, cs), "interpret"))
-    rows.append(("kernel/kmeans_assign_ref", _time(jax.jit(assign_nearest_ref), xs, cs), "oracle"))
+    for name in registry.names():
+        spec = registry.get(name)
+        args = spec.make_inputs(jax.random.key(0), spec.bench_shapes)
+        label = _shape_label(spec.bench_shapes)
+        tiles = spec.tiles_for_backend(registry.backend())
+        mode = "interpret" if registry.interpret_default() else "compiled"
+        pallas_fn = lambda *a: spec.pallas(*a, tiles=tiles, interpret=registry.interpret_default())
+        rows.append((f"kernel/{name}_{label}", _time(pallas_fn, *args), mode))
+        rows.append((f"kernel/{name}_ref", _time(jax.jit(spec.ref), *args), "oracle"))
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--list", action="store_true", help="enumerate registry kernels")
+    ap.add_argument("--autotune", action="store_true", help="sweep each kernel's tile grid")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for name in registry.names():
+            spec = registry.get(name)
+            print(
+                f"{name}: bench={_shape_label(spec.bench_shapes)} "
+                f"candidates={len(spec.tile_candidates)} "
+                f"default_tiles={dict(spec.tiles_for_backend(registry.backend()))}"
+            )
+        return 0
+
+    if args.autotune:
+        # same policy as autotune.tiles_for: interpret-mode wall-times say
+        # nothing about Mosaic, so don't poison the shippable cache with
+        # them unless the user forces REPRO_AUTOTUNE=1.
+        cache = autotune.autotune_enabled()
+        for name in registry.names():
+            spec = registry.get(name)
+            entry = autotune.sweep(spec, spec.bench_shapes)
+            if cache and entry.get("us") is not None:
+                autotune.record(spec, spec.bench_shapes, entry)
+            print(f"{name}: winner={entry['tiles']} us={entry.get('us')}")
+        if cache:
+            print(f"# winners cached at {autotune.cache_path()}")
+        else:
+            print("# interpret mode: winners NOT cached (REPRO_AUTOTUNE=1 forces)")
+        return 0
+
+    for r in run(quick=args.quick):
         print(",".join(str(c) for c in r))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

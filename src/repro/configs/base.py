@@ -281,7 +281,13 @@ class NomadConfig:
     mean_refresh_steps: int = 0  # 0 => once per epoch (paper); else every T steps
     hierarchical: bool = False  # pod-level super-means across the slow axis
     n_cluster_groups: int = 0  # super-mean groups (0 => one per pod shard)
-    use_pallas: bool = True  # fused kernels on the hot path
+
+    # kernel dispatch (repro.kernels.registry): "" defers to the legacy
+    # ``use_pallas`` switch; "auto" lets the registry pick per backend
+    # (tpu/gpu → pallas, cpu → jnp; REPRO_KERNELS / REPRO_KERNEL_<NAME>
+    # env vars override); "pallas"/"jnp" force one path everywhere.
+    kernel_impl: str = ""
+    use_pallas: bool = True  # legacy switch; ``kernel_impl`` supersedes it
 
     # fault tolerance
     checkpoint_every_epochs: int = 5
@@ -289,6 +295,12 @@ class NomadConfig:
 
     def resolved_lr0(self) -> float:
         return self.lr0 if self.lr0 > 0 else self.n_points / 10.0
+
+    def resolved_kernel_impl(self) -> str:
+        """The registry ``impl`` argument this run dispatches kernels with."""
+        if self.kernel_impl:
+            return self.kernel_impl
+        return "auto" if self.use_pallas else "jnp"
 
     def resolved_steps_per_epoch(self) -> int:
         if self.steps_per_epoch:

@@ -121,7 +121,9 @@ def make_sharded_epoch_fn(
         cell_means = jax.lax.stop_gradient(cell_means)
 
         def loss_fn(ti, tp, tn):
-            m_tilde = losses.nomad_mean_term(ti, cell_means, cell_w, own_cell, cfg.use_pallas)
+            m_tilde = losses.nomad_mean_term(
+                ti, cell_means, cell_w, own_cell, cfg.resolved_kernel_impl()
+            )
             return losses.contrastive_loss(ti, tp, pos_w, m_tilde, tn, neg_w)
 
         loss, (g_i, g_pos, g_neg) = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(

@@ -12,10 +12,11 @@ with ``mean_w[b,r] = |M| · p(m∈r)`` for approximated cells r (0 for the
 head's own cell and non-approximated cells) and ``neg_w`` the importance
 weight of each drawn sample (``|M| · p(m∈r) / n_samples_r``).
 
-The hot term M̃ (B × K Cauchy evaluations per step) is served by the fused
-Pallas kernel (:mod:`repro.kernels.cauchy_mean`) when ``use_pallas=True``,
-which builds the ``|M|·p(m∈r)·[r ≠ own]`` weights in-register; the pure jnp
-path is the oracle.
+The hot term M̃ (B × K Cauchy evaluations per step) dispatches through the
+kernel registry (:mod:`repro.kernels.registry`, kernel ``"cauchy_mean"``):
+the fused Pallas path builds the ``|M|·p(m∈r)·[r ≠ own]`` weights
+in-register; the pure jnp path is the oracle. ``impl`` selects per call
+("auto" picks per backend; legacy bools still work).
 """
 
 from __future__ import annotations
@@ -39,15 +40,11 @@ def nomad_mean_term(
     means: jax.Array,
     cell_w: jax.Array,  # (K,) = |M| · p(m∈r)
     own_cell: jax.Array,  # (B,) global cell id of each head (excluded from M̃)
-    use_pallas: bool,
+    impl=None,  # registry impl: None/"auto" | "pallas" | "jnp" (bools legacy)
 ) -> jax.Array:
-    if use_pallas:
-        from repro.kernels.cauchy_mean.ops import cauchy_weighted_sum
+    from repro.kernels import registry
 
-        return cauchy_weighted_sum(theta_i, means, cell_w, own_cell)
-    K = means.shape[0]
-    mask = own_cell[:, None] != jnp.arange(K, dtype=own_cell.dtype)[None, :]
-    return mean_term_jnp(theta_i, means, cell_w[None, :] * mask)
+    return registry.dispatch("cauchy_mean", theta_i, means, cell_w, own_cell, impl=impl)
 
 
 def contrastive_loss(
@@ -95,7 +92,7 @@ def nomad_loss(
     theta_neg,  # (B, S, d) samples drawn uniformly from the head's own cell
     n_noise: int,  # |M|
     n_total: int,  # N (support size of ξ per head; self-edges negligible at scale)
-    use_pallas: bool = False,
+    impl=None,  # registry impl for the M̃ kernel (None/"auto"|"pallas"|"jnp")
 ):
     """Eq. 3 with R̃ = all cells except the head's own (the paper's default).
 
@@ -106,7 +103,7 @@ def nomad_loss(
     p_cell = counts.astype(jnp.float32) / float(n_total)  # (K,)
     cell_w = float(n_noise) * p_cell  # (K,)
     means = jax.lax.stop_gradient(means)
-    m_tilde = nomad_mean_term(theta_i, means, cell_w, cell_of_i, use_pallas)
+    m_tilde = nomad_mean_term(theta_i, means, cell_w, cell_of_i, impl)
     p_own = p_cell[cell_of_i]  # (B,)
     neg_w = jnp.broadcast_to((float(n_noise) * p_own / S)[:, None], (B, S))
     return contrastive_loss(theta_i, theta_pos, pos_w, m_tilde, theta_neg, neg_w)

@@ -126,7 +126,7 @@ def make_step_fn(
                     tn,
                     n_noise=Mn,
                     n_total=n_total,
-                    use_pallas=cfg.use_pallas,
+                    impl=cfg.resolved_kernel_impl(),
                 )
 
         loss, (g_i, g_pos, g_neg) = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(

@@ -61,10 +61,14 @@ def _np_dist2(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     )
 
 
-def build_index(x: np.ndarray, cfg: NomadConfig, use_pallas: bool | None = None) -> AnnIndex:
-    """K-means (LSH init) → capacity-bounded clusters → in-cluster exact kNN."""
+def build_index(x: np.ndarray, cfg: NomadConfig, use_pallas=None) -> AnnIndex:
+    """K-means (LSH init) → capacity-bounded clusters → in-cluster exact kNN.
+
+    ``use_pallas`` is a registry impl override ("auto"|"pallas"|"jnp", legacy
+    bools accepted); None defers to ``cfg.resolved_kernel_impl()``.
+    """
     if use_pallas is None:
-        use_pallas = cfg.use_pallas
+        use_pallas = cfg.resolved_kernel_impl()
     n, d = x.shape
     K, C, k = cfg.n_clusters, cfg.cluster_capacity, cfg.n_neighbors
     if K * C < n:

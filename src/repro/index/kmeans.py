@@ -4,8 +4,9 @@ The paper: "We initialize our K-Means clustering using a locally sensitive
 hash, run expectation maximization until convergence, and compute exact
 nearest neighbors for each point within its cluster."
 
-The E-step distance+argmin is served by the fused Pallas kernel
-(``repro.kernels.kmeans_assign``) when enabled; the jnp path is the oracle.
+The E-step distance+argmin dispatches through the kernel registry
+(kernel ``"kmeans_assign"``): the fused Pallas path when resolved, else
+the blocked jnp path (which doubles as the oracle).
 A ``shard_map`` variant (`kmeans_fit_sharded`) runs EM with points sharded
 across devices — per-iteration communication is one psum of (K, D+1)
 partial statistics, the classic distributed-EM factorisation.
@@ -78,15 +79,22 @@ def kmeans_fit(
     n_clusters: int,
     n_iters: int = 25,
     tol: float = 1e-4,
-    use_pallas: bool = False,
+    use_pallas=False,
 ):
-    """Lloyd's EM from LSH init. Returns (centroids, assignments, counts)."""
+    """Lloyd's EM from LSH init. Returns (centroids, assignments, counts).
+
+    ``use_pallas`` is a registry impl: "auto" | "pallas" | "jnp" (legacy
+    bools accepted). The jnp path keeps the row-blocked ``assign_jnp`` so
+    huge N never materialises an (N, K) matrix.
+    """
+    from repro.kernels import registry
+
     cents = lsh_init_centroids(key, x, n_clusters)
 
-    if use_pallas:
-        from repro.kernels.kmeans_assign.ops import assign_nearest
-
-        assign_fn: Callable = lambda xx, cc: assign_nearest(xx, cc)
+    if registry.resolve("kmeans_assign", use_pallas) == "pallas":
+        assign_fn: Callable = lambda xx, cc: registry.dispatch(
+            "kmeans_assign", xx, cc, impl="pallas"
+        )
     else:
         assign_fn = assign_jnp
 

@@ -4,8 +4,8 @@ Because neighbor candidates are confined to the point's own (padded) cluster
 block, every cluster is a connected component of the ANN graph — the paper's
 device-locality property for positive forces.
 
-The pairwise-distance matrix is served by the Pallas ``pairwise`` kernel
-(MXU form ‖x‖²+‖y‖²−2x·yᵀ) when enabled; jnp otherwise. Top-k and the rank
+The pairwise-distance matrix dispatches through the kernel registry
+(kernel ``"pairwise"``, MXU form ‖x‖²+‖y‖²−2x·yᵀ). Top-k and the rank
 matrix stay in jnp (sort-heavy, VPU-bound either way).
 """
 
@@ -27,20 +27,19 @@ def _pairwise_dist2_jnp(xb: jax.Array) -> jax.Array:
     return jnp.maximum(d2, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "use_pallas"))
-def cluster_knn(
+@functools.partial(jax.jit, static_argnames=("k", "impl"))
+def _cluster_knn_jit(
     x_block: jax.Array,  # (C, D) one padded cluster
     valid: jax.Array,  # (C,) real-point mask
     k: int,
-    use_pallas: bool = False,
+    impl: str,  # pre-resolved: "pallas" | "jnp"
 ):
-    """Returns (knn_idx (C, k) in-cluster slots, weights (C, k) fp32)."""
+    from repro.kernels import registry
+
     C = x_block.shape[0]
     xb = x_block.astype(jnp.float32)
-    if use_pallas:
-        from repro.kernels.pairwise.ops import pairwise_dist2
-
-        d2 = pairwise_dist2(xb, xb)
+    if impl == "pallas":
+        d2 = registry.dispatch("pairwise", xb, xb, impl="pallas")
     else:
         d2 = _pairwise_dist2_jnp(xb)
     # mask padding and self for neighbor search
@@ -53,6 +52,21 @@ def cluster_knn(
     return knn_idx.astype(jnp.int32), w
 
 
+def cluster_knn(x_block, valid, k: int, use_pallas=False):
+    """Returns (knn_idx (C, k) in-cluster slots, weights (C, k) fp32).
+
+    ``use_pallas`` is a registry impl ("auto"|"pallas"|"jnp", legacy bools
+    accepted); it is resolved *outside* the jit so env overrides apply per
+    call, never baked into a cached trace.
+    """
+    from repro.kernels import registry
+
+    return _cluster_knn_jit(x_block, valid, k, registry.resolve("pairwise", use_pallas))
+
+
 def batched_cluster_knn(x_blocks: jax.Array, valid: jax.Array, k: int, use_pallas=False):
     """vmap over clusters: x_blocks (Kc, C, D), valid (Kc, C)."""
-    return jax.vmap(lambda xb, vb: cluster_knn(xb, vb, k, use_pallas))(x_blocks, valid)
+    from repro.kernels import registry
+
+    impl = registry.resolve("pairwise", use_pallas)
+    return jax.vmap(lambda xb, vb: _cluster_knn_jit(xb, vb, k, impl))(x_blocks, valid)

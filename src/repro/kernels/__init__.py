@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Fused-kernel package: Pallas hot-spot kernels behind one registry.
+
+Each kernel lives in its own sub-package as
+
+  <name>/<name>.py   the Pallas kernel bodies (tile-parameterized)
+  <name>/ops.py      the public padding-safe op + its ``KernelSpec``
+  <name>/ref.py      the pure-jnp oracle
+
+and registers itself with :mod:`repro.kernels.registry`. Consumers call
+``registry.dispatch("<name>", *args, impl=...)``; tile sizes come from
+:mod:`repro.kernels.autotune` (per-backend grid sweep, on-disk cache).
+Adding a kernel = write the three files + ``registry.register(spec)`` —
+see docs/ARCHITECTURE.md for a worked example.
+"""
+
+from repro.kernels import registry  # noqa: F401

@@ -1,0 +1,164 @@
+"""First-call tile-size autotuner with an on-disk winner cache.
+
+For each (kernel, backend, shape-signature) the tuner times every candidate
+in the spec's small tile grid on synthesized inputs and records the winner:
+
+* in-process  — a dict, so a jitted trace asks at most once per signature;
+* on disk     — JSON at ``$REPRO_TUNE_CACHE`` (default
+  ``~/.cache/repro/kernel_tune.json``), so winners survive across runs and
+  can be shipped with a deployment.
+
+The sweep runs *eagerly* on freshly synthesized concrete inputs (from
+``spec.make_inputs``), which makes it legal to trigger from inside a jit
+trace: tracers only contribute their static shape signature, never data.
+
+Enablement policy (``REPRO_AUTOTUNE``): "1" forces tuning on, "0" forces it
+off; unset ⇒ tune only when the Pallas path actually compiles (i.e. not in
+interpret mode) — interpret-mode wall-times say nothing about Mosaic, so
+CPU CI silently falls back to the spec's per-backend default tiles.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Mapping, Optional
+
+import jax
+
+from repro.kernels.registry import KernelSpec, ShapeSig, backend, interpret_default
+
+_memory_cache: dict[str, dict] = {}
+_disk_loaded_from: Optional[str] = None
+
+_SWEEP_REPS = 3  # timed reps per candidate (after one compile/warmup call)
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_TUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "kernel_tune.json"),
+    )
+
+
+def cache_key(name: str, back: str, sig: ShapeSig) -> str:
+    return f"{name}|{back}|{sig!r}"
+
+
+def autotune_enabled() -> bool:
+    env = os.environ.get("REPRO_AUTOTUNE")
+    if env is not None:
+        return env != "0"
+    return not interpret_default()
+
+
+# ---------------------------------------------------------------------------
+# Disk cache
+# ---------------------------------------------------------------------------
+
+
+def _load_disk() -> None:
+    """Merge the on-disk cache into memory (once per path)."""
+    global _disk_loaded_from
+    path = cache_path()
+    if _disk_loaded_from == path:
+        return
+    _disk_loaded_from = path
+    try:
+        with open(path) as f:
+            on_disk = json.load(f)
+    except (OSError, ValueError):
+        return
+    for k, v in on_disk.items():
+        _memory_cache.setdefault(k, v)
+
+
+def _store_disk(key: str, entry: dict) -> None:
+    """Read-modify-write with an atomic replace (best-effort on failure)."""
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        try:
+            with open(path) as f:
+                on_disk = json.load(f)
+        except (OSError, ValueError):
+            on_disk = {}
+        on_disk[key] = entry
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(on_disk, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS etc. — the in-memory winner still applies
+
+
+def clear_memory_cache() -> None:
+    """Testing hook: forget in-process winners (disk is untouched)."""
+    global _disk_loaded_from
+    _memory_cache.clear()
+    _disk_loaded_from = None
+
+
+# ---------------------------------------------------------------------------
+# The sweep
+# ---------------------------------------------------------------------------
+
+
+def _time_candidate(spec: KernelSpec, args: tuple, tiles: Mapping[str, int], interpret: bool) -> float:
+    """Median-free min-of-reps wall time (µs) for one tile candidate."""
+    run = lambda: jax.block_until_ready(spec.pallas(*args, tiles=tiles, interpret=interpret))
+    run()  # compile / warm up
+    best = float("inf")
+    for _ in range(_SWEEP_REPS):
+        t0 = time.perf_counter()
+        run()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def sweep(spec: KernelSpec, sig: ShapeSig, *, interpret: Optional[bool] = None) -> dict:
+    """Time every tile candidate at ``sig``; return the winning entry.
+
+    Runs eagerly on synthesized inputs — never touches caller data.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    args = spec.make_inputs(jax.random.key(0), sig)
+    results = []
+    for tiles in spec.tile_candidates:
+        try:
+            us = _time_candidate(spec, args, tiles, interpret)
+        except Exception:  # noqa: BLE001 — invalid tiling for this shape
+            continue
+        results.append((us, dict(tiles)))
+    if not results:
+        return {"tiles": dict(spec.tiles_for_backend(backend())), "us": None}
+    us, tiles = min(results, key=lambda r: r[0])
+    return {"tiles": tiles, "us": us, "n_candidates": len(results)}
+
+
+def record(spec: KernelSpec, sig: ShapeSig, entry: dict) -> None:
+    """Store a sweep winner (memory + disk) — e.g. from an explicit
+    ``kernel_micro.py --autotune`` run warming the cache for a deployment."""
+    key = cache_key(spec.name, backend(), sig)
+    _memory_cache[key] = entry
+    _store_disk(key, entry)
+
+
+def tiles_for(spec: KernelSpec, sig: ShapeSig) -> Mapping[str, int]:
+    """The dispatcher's entry point: cached winner, else sweep, else defaults."""
+    back = backend()
+    key = cache_key(spec.name, back, sig)
+    _load_disk()
+    entry = _memory_cache.get(key)
+    if entry is None:
+        if autotune_enabled():
+            entry = sweep(spec, sig)
+            if entry.get("us") is not None:  # a failed sweep (every candidate
+                _store_disk(key, entry)  # errored) must not poison the disk
+        else:  # cache — retry next process
+            entry = {"tiles": dict(spec.tiles_for_backend(back)), "us": None}
+        _memory_cache[key] = entry
+    return entry["tiles"]

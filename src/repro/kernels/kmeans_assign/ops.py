@@ -1,21 +1,21 @@
-"""Public op for the fused K-means E-step (padding-safe jit wrapper)."""
+"""Public op + registry spec for the fused K-means E-step
+(padding-safe jit wrapper around the distance+argmin Pallas kernel)."""
 
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels import registry
 from repro.kernels.kmeans_assign.kmeans_assign import assign_nearest_pallas
+from repro.kernels.kmeans_assign.ref import assign_nearest_ref
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
-
-@functools.partial(jax.jit, static_argnames=("block_n", "block_k"))
-def assign_nearest(x, cents, block_n: int = 512, block_k: int = 256):
-    """x (N, D), cents (K, D) → (assign (N,) int32, min_d2 (N,) fp32)."""
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
+def _assign_nearest_padded(x, cents, block_n, block_k, interpret):
     n, k = x.shape[0], cents.shape[0]
     bn, bk = min(block_n, max(n, 8)), min(block_k, max(k, 8))
     pad_n = (-n) % bn
@@ -28,6 +28,87 @@ def assign_nearest(x, cents, block_n: int = 512, block_k: int = 256):
     else:
         cp = cents
     arg, mind = assign_nearest_pallas(
-        xp.astype(jnp.float32), cp.astype(jnp.float32), block_n=bn, block_k=bk, interpret=INTERPRET
+        xp.astype(jnp.float32), cp.astype(jnp.float32), block_n=bn, block_k=bk, interpret=interpret
     )
     return arg[0, :n], mind[0, :n]
+
+
+def assign_nearest(
+    x,
+    cents,
+    block_n: int = 512,
+    block_k: int = 256,
+    interpret: bool | None = None,
+):
+    """x (N, D), cents (K, D) → (assign (N,) int32, min_d2 (N,) fp32)."""
+    if interpret is None:
+        interpret = registry.interpret_default()
+    return _assign_nearest_padded(x, cents, block_n, block_k, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Registry spec
+# ---------------------------------------------------------------------------
+
+
+def _pallas_adapter(x, cents, *, tiles, interpret):
+    return assign_nearest(
+        x,
+        cents,
+        block_n=tiles.get("block_n", 512),
+        block_k=tiles.get("block_k", 256),
+        interpret=interpret,
+    )
+
+
+def _make_inputs(key, sig):
+    (xs, xdt), (cs, cdt) = sig
+    kx, kc = jax.random.split(key)
+    return jax.random.normal(kx, xs, xdt), jax.random.normal(kc, cs, cdt)
+
+
+def _oracle_check(args, got, want):
+    """Argmin ties may break differently between tilings: assert the min
+    distances agree and the chosen centroid is distance-equivalent."""
+    x, cents = args
+    a_got, d_got = (np.asarray(got[0]), np.asarray(got[1]))
+    a_want, d_want = (np.asarray(want[0]), np.asarray(want[1]))
+    np.testing.assert_allclose(d_got, d_want, rtol=1e-4, atol=1e-4)
+    xf = np.asarray(x, np.float32)
+    cf = np.asarray(cents, np.float32)
+    d_of_got = np.sum(np.square(xf - cf[a_got]), axis=-1)
+    d_of_want = np.sum(np.square(xf - cf[a_want]), axis=-1)
+    np.testing.assert_allclose(d_of_got, d_of_want, rtol=1e-4, atol=1e-4)
+
+
+def _sig(n, k, d, dt="float32"):
+    return (((n, d), dt), ((k, d), dt))
+
+
+SPEC = registry.register(
+    registry.KernelSpec(
+        name="kmeans_assign",
+        ref=assign_nearest_ref,
+        pallas=_pallas_adapter,
+        tile_candidates=(
+            {"block_n": 256, "block_k": 128},
+            {"block_n": 512, "block_k": 256},
+            {"block_n": 512, "block_k": 512},
+            {"block_n": 1024, "block_k": 256},
+        ),
+        default_tiles={
+            "": {"block_n": 512, "block_k": 256},
+            "tpu": {"block_n": 512, "block_k": 256},
+        },
+        make_inputs=_make_inputs,
+        check_shapes=(
+            _sig(512, 256, 64),
+            _sig(1000, 17, 32),
+            _sig(64, 512, 128),
+            _sig(513, 255, 48),
+        ),
+        bench_shapes=_sig(4096, 256, 128),
+        tol=(1e-4, 1e-4),
+        oracle_check=_oracle_check,
+    )
+)

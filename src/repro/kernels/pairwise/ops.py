@@ -1,20 +1,21 @@
-"""jit'd public wrapper: pads to block multiples, dispatches, slices back.
+"""Public op + registry spec for the blocked pairwise-distance kernel.
 
-``interpret=True`` on CPU (this container); on a real TPU the same call
-compiles the Mosaic kernel (set ``REPRO_PALLAS_INTERPRET=0``).
+The jit'd wrapper pads to block multiples, dispatches the Pallas kernel,
+and slices back. ``interpret=None`` resolves via the registry policy
+(interpret on CPU, compiled on real hardware, ``REPRO_PALLAS_INTERPRET``
+overrides).
 """
 
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.pairwise.pairwise import pairwise_dist2_pallas
-
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+from repro.kernels.pairwise.ref import pairwise_dist2_ref
 
 
 def _pad_rows(a: jax.Array, mult: int) -> jax.Array:
@@ -31,21 +32,84 @@ def _pad_cols(a: jax.Array, mult: int) -> jax.Array:
     return a
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "block_d"))
-def pairwise_dist2(
-    x: jax.Array,
-    y: jax.Array,
-    block_n: int = 256,
-    block_m: int = 256,
-    block_d: int = 512,
-) -> jax.Array:
-    """(N, D) × (M, D) → (N, M) fp32 squared distances (padding-safe)."""
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "block_d", "interpret")
+)
+def _pairwise_dist2_padded(x, y, block_n, block_m, block_d, interpret):
     n, m = x.shape[0], y.shape[0]
     bn, bm = min(block_n, max(n, 8)), min(block_m, max(m, 128))
     xp = _pad_cols(_pad_rows(x.astype(jnp.float32), bn), block_d)
     yp = _pad_cols(_pad_rows(y.astype(jnp.float32), bm), block_d)
     bd = min(block_d, xp.shape[1])
     out = pairwise_dist2_pallas(
-        xp, yp, block_n=bn, block_m=bm, block_d=bd, interpret=INTERPRET
+        xp, yp, block_n=bn, block_m=bm, block_d=bd, interpret=interpret
     )
     return out[:n, :m]
+
+
+def pairwise_dist2(
+    x: jax.Array,
+    y: jax.Array,
+    block_n: int = 256,
+    block_m: int = 256,
+    block_d: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(N, D) × (M, D) → (N, M) fp32 squared distances (padding-safe)."""
+    if interpret is None:
+        interpret = registry.interpret_default()
+    return _pairwise_dist2_padded(x, y, block_n, block_m, block_d, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Registry spec
+# ---------------------------------------------------------------------------
+
+
+def _pallas_adapter(x, y, *, tiles, interpret):
+    return pairwise_dist2(
+        x,
+        y,
+        block_n=tiles.get("block_n", 256),
+        block_m=tiles.get("block_m", 256),
+        block_d=tiles.get("block_d", 512),
+        interpret=interpret,
+    )
+
+
+def _make_inputs(key, sig):
+    (xs, xdt), (ys, ydt) = sig
+    kx, ky = jax.random.split(key)
+    return jax.random.normal(kx, xs, xdt), jax.random.normal(ky, ys, ydt)
+
+
+def _sig(n, m, d, dt="float32"):
+    return (((n, d), dt), ((m, d), dt))
+
+
+SPEC = registry.register(
+    registry.KernelSpec(
+        name="pairwise",
+        ref=pairwise_dist2_ref,
+        pallas=_pallas_adapter,
+        tile_candidates=(
+            {"block_n": 128, "block_m": 128, "block_d": 256},
+            {"block_n": 256, "block_m": 256, "block_d": 256},
+            {"block_n": 256, "block_m": 256, "block_d": 512},
+            {"block_n": 512, "block_m": 256, "block_d": 512},
+        ),
+        default_tiles={
+            "": {"block_n": 256, "block_m": 256, "block_d": 512},
+            "tpu": {"block_n": 256, "block_m": 256, "block_d": 512},
+        },
+        make_inputs=_make_inputs,
+        check_shapes=(
+            _sig(96, 128, 64),
+            _sig(100, 60, 33),
+            _sig(8, 257, 128),
+            _sig(64, 64, 16, "bfloat16"),
+        ),
+        bench_shapes=_sig(1024, 1024, 256),
+        tol=(2e-5, 2e-5),
+    )
+)

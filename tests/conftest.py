@@ -1,0 +1,65 @@
+"""Shared test configuration.
+
+Two responsibilities:
+
+* Put ``src/`` on ``sys.path`` so the suite runs from a plain checkout
+  (``pip install -e .`` makes this a no-op).
+* Make ``hypothesis`` an *optional* dependency: when it is not installed,
+  a minimal stub is injected into ``sys.modules`` whose ``@given`` replaces
+  the property test with a clean ``pytest.skip`` — the remaining
+  (non-property) tests in those modules still collect and run.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import types
+
+import pytest
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def _install_hypothesis_stub() -> None:
+    mod = types.ModuleType("hypothesis")
+    strategies = types.ModuleType("hypothesis.strategies")
+
+    def given(*_a, **_kw):
+        def deco(fn):
+            def wrapper():
+                pytest.skip("hypothesis not installed (property test skipped)")
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco
+
+    def settings(*_a, **_kw):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _AnyStrategy:
+        """st.integers(...), st.floats(...), … — inert placeholders."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **kw: None
+
+    strategies.__getattr__ = _AnyStrategy().__getattr__  # type: ignore[attr-defined]
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+try:  # pragma: no cover - trivially environment-dependent
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_stub()

@@ -1,0 +1,202 @@
+"""Kernel registry subsystem tests.
+
+* every registered kernel's Pallas path matches its jnp oracle across the
+  spec's shape grid (interpret mode on CPU — same bodies Mosaic compiles),
+* tile-size dispatch honors explicit/env/config overrides,
+* the autotuner sweeps the tile grid and its on-disk cache round-trips,
+* ``losses.nomad_mean_term`` dispatches through the registry with pallas
+  and jnp agreeing (the Eq. 3 hot term — acceptance criterion).
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import NomadConfig
+from repro.core import losses
+from repro.kernels import autotune, registry
+
+ALL_KERNELS = registry.names()
+
+
+# ---------------------------------------------------------------------------
+# Correctness oracle across the shape grid
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_KERNELS)
+def test_every_kernel_registers_complete_spec(name):
+    spec = registry.get(name)
+    assert callable(spec.ref) and callable(spec.pallas) and callable(spec.make_inputs)
+    assert len(spec.tile_candidates) >= 2, "autotune grid must be a real sweep"
+    assert "" in spec.default_tiles, "needs a fallback-backend default"
+    assert spec.check_shapes and spec.bench_shapes
+
+
+@pytest.mark.parametrize("name", ALL_KERNELS)
+def test_pallas_matches_oracle_across_shape_grid(name):
+    spec = registry.get(name)
+    for i, sig in enumerate(spec.check_shapes):
+        args = spec.make_inputs(jax.random.key(17 * i + 3), sig)
+        registry.validate(name, args, interpret=True)
+
+
+@pytest.mark.parametrize("name", ALL_KERNELS)
+def test_pallas_matches_oracle_for_every_tile_candidate(name):
+    """Tile sizes change the tiling, never the math — any autotune winner
+    is safe to deploy."""
+    spec = registry.get(name)
+    sig = spec.check_shapes[0]
+    args = spec.make_inputs(jax.random.key(5), sig)
+    for tiles in spec.tile_candidates:
+        registry.validate(name, args, tiles=tiles, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch + override resolution
+# ---------------------------------------------------------------------------
+
+
+def test_normalize_impl_accepts_legacy_bools():
+    assert registry.normalize_impl(True) == "pallas"
+    assert registry.normalize_impl(False) == "jnp"
+    assert registry.normalize_impl(None) == "auto"
+    assert registry.normalize_impl("auto") == "auto"
+    assert registry.normalize_impl("ref") == "jnp"
+    with pytest.raises(ValueError):
+        registry.normalize_impl("cuda")
+
+
+def test_resolve_explicit_beats_env(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "jnp")
+    monkeypatch.setenv("REPRO_KERNEL_PAIRWISE", "jnp")
+    assert registry.resolve("pairwise", "pallas") == "pallas"
+
+
+def test_resolve_per_kernel_env_beats_global(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "jnp")
+    monkeypatch.setenv("REPRO_KERNEL_PAIRWISE", "pallas")
+    assert registry.resolve("pairwise") == "pallas"
+    assert registry.resolve("cauchy_mean") == "jnp"
+
+
+def test_resolve_backend_policy_on_cpu(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNELS", raising=False)
+    monkeypatch.delenv("REPRO_KERNEL_PAIRWISE", raising=False)
+    want = "jnp" if jax.default_backend() == "cpu" else "pallas"
+    assert registry.resolve("pairwise") == want
+
+
+def test_config_threads_impl():
+    assert NomadConfig().resolved_kernel_impl() == "auto"
+    assert NomadConfig(use_pallas=False).resolved_kernel_impl() == "jnp"
+    assert NomadConfig(kernel_impl="pallas").resolved_kernel_impl() == "pallas"
+    # kernel_impl supersedes the legacy bool
+    assert NomadConfig(use_pallas=True, kernel_impl="jnp").resolved_kernel_impl() == "jnp"
+
+
+def test_dispatch_unknown_kernel_raises():
+    with pytest.raises(KeyError, match="unknown kernel"):
+        registry.get("fused_sparse_sgd_scatter")
+
+
+# ---------------------------------------------------------------------------
+# nomad_mean_term through the registry (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def _mean_term_inputs(B=512, K=1024, d=2, seed=0):
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(seed), 4)
+    theta = jax.random.normal(k1, (B, d), jnp.float32) * 3.0
+    means = jax.random.normal(k2, (K, d), jnp.float32) * 3.0
+    w = jax.random.uniform(k3, (K,), jnp.float32)
+    own = jax.random.randint(k4, (B,), 0, K)
+    return theta, means, w, own
+
+
+def test_nomad_mean_term_pallas_matches_jnp_oracle():
+    theta, means, w, own = _mean_term_inputs()
+    got = losses.nomad_mean_term(theta, means, w, own, impl="pallas")
+    want = losses.nomad_mean_term(theta, means, w, own, impl="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_nomad_mean_term_grad_matches_across_impls():
+    theta, means, w, own = _mean_term_inputs(B=256, K=512, seed=7)
+
+    def f(impl):
+        return jax.grad(
+            lambda th: jnp.sum(jnp.sin(losses.nomad_mean_term(th, means, w, own, impl)))
+        )(theta)
+
+    np.testing.assert_allclose(
+        np.asarray(f("pallas")), np.asarray(f("jnp")), rtol=1e-4, atol=1e-6
+    )
+
+
+def test_nomad_mean_term_legacy_bool_still_works():
+    theta, means, w, own = _mean_term_inputs(B=100, K=64, seed=3)
+    got = losses.nomad_mean_term(theta, means, w, own, True)
+    want = losses.nomad_mean_term(theta, means, w, own, False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Autotune
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def tune_env(tmp_path, monkeypatch):
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(path))
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    autotune.clear_memory_cache()
+    yield path
+    autotune.clear_memory_cache()
+
+
+def test_autotune_sweep_picks_a_candidate(tune_env):
+    spec = registry.get("pairwise")
+    entry = autotune.sweep(spec, spec.check_shapes[0], interpret=True)
+    assert entry["tiles"] in [dict(t) for t in spec.tile_candidates]
+    assert entry["us"] is not None and entry["us"] > 0
+    assert entry["n_candidates"] == len(spec.tile_candidates)
+
+
+def test_autotune_cache_roundtrips_through_disk(tune_env):
+    spec = registry.get("pairwise")
+    sig = spec.check_shapes[0]
+    tiles1 = autotune.tiles_for(spec, sig)
+
+    on_disk = json.loads(tune_env.read_text())
+    key = autotune.cache_key("pairwise", registry.backend(), sig)
+    assert on_disk[key]["tiles"] == dict(tiles1)
+
+    # a fresh process (simulated: cleared memory) reloads the disk winner
+    autotune.clear_memory_cache()
+    assert autotune.tiles_for(spec, sig) == tiles1
+
+
+def test_autotune_disabled_uses_backend_defaults(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune.json"))
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    autotune.clear_memory_cache()
+    spec = registry.get("kmeans_assign")
+    tiles = autotune.tiles_for(spec, spec.check_shapes[0])
+    assert tiles == dict(spec.tiles_for_backend(registry.backend()))
+    assert not (tmp_path / "tune.json").exists()  # nothing written
+    autotune.clear_memory_cache()
+
+
+def test_dispatch_with_explicit_tiles_skips_autotuner(monkeypatch):
+    """tiles= pins the tiling — no tuner, no cache, still correct."""
+    theta, means, w, own = _mean_term_inputs(B=64, K=128, seed=11)
+    got = registry.dispatch(
+        "cauchy_mean", theta, means, w, own, impl="pallas", tiles={"bb": 64, "bk": 128}
+    )
+    want = registry.dispatch("cauchy_mean", theta, means, w, own, impl="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)

@@ -118,7 +118,9 @@ def test_compressed_psum_single_axis():
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("d",))
     g = {"w": jnp.linspace(-2, 2, 512)}
     r = jax.tree.map(jnp.zeros_like, g)
 
