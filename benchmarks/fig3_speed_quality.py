@@ -31,7 +31,8 @@ N, DIM = 8000, 64
 def _cfg(**kw):
     base = dict(
         n_points=N, dim=DIM, n_clusters=16, n_neighbors=15, n_noise=32,
-        n_exact_negatives=8, batch_size=1024, n_epochs=30, use_pallas=False,
+        n_exact_negatives=8, batch_size=1024, n_epochs=30,
+        strategy="local",  # both methods on one device — apples to apples
     )
     base.update(kw)
     return NomadConfig(**base)
@@ -48,8 +49,8 @@ def run(quick: bool = False):
 
     for method in ("nomad", "infonc"):
         for epochs in sweep:
-            cfg = _cfg(n_epochs=epochs, n_noise=64)
-            res = NomadProjection(cfg, method=method).fit(x, index=index)
+            cfg = _cfg(n_epochs=epochs, n_noise=64, method=method)
+            res = NomadProjection(cfg).fit(x, index=index)
             per_epoch = (
                 float(np.mean(res.epoch_times[1:]))
                 if len(res.epoch_times) > 1

@@ -25,7 +25,7 @@ def run(quick: bool = False):
     cfg = NomadConfig(
         n_points=n, dim=48, n_clusters=20, n_neighbors=15, n_noise=32,
         n_exact_negatives=8, batch_size=1024,
-        n_epochs=10 if quick else 30, use_pallas=False,
+        n_epochs=10 if quick else 30,
     )
     res = NomadProjection(cfg).fit(x)
     emb = res.embedding

@@ -34,7 +34,7 @@ _WORKER = r"""
 import sys, time, json
 import numpy as np, jax
 from repro.configs.base import NomadConfig
-from repro.core.distributed import fit_distributed
+from repro.core.nomad import NomadProjection
 from repro.data.synthetic import gaussian_mixture
 from repro.metrics import neighborhood_preservation
 from repro.index.ann import build_index
@@ -42,10 +42,12 @@ from repro.index.ann import build_index
 cfg = NomadConfig(**json.loads(sys.argv[1]))
 x, _ = gaussian_mixture(cfg.n_points, cfg.dim, n_components=16, seed=0)
 index = build_index(x, cfg)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
+proj = NomadProjection(cfg, strategy="sharded", mesh=mesh,
+                       shard_axes=("data", "model"))
 t0 = time.time()
-emb, _, _ = fit_distributed(cfg, x, mesh, index=index)
+emb = proj.fit_transform(x, index=index)
 wall = time.time() - t0
 np10 = neighborhood_preservation(x, emb, k=10, n_queries=600)
 print("RESULT", json.dumps({"wall": wall, "np10": np10}))
@@ -56,7 +58,7 @@ def run(quick: bool = False):
     epochs = 6 if quick else 20
     cfg = NomadConfig(
         n_points=N, dim=DIM, n_clusters=32, n_neighbors=15, n_noise=32,
-        n_exact_negatives=8, batch_size=1024, n_epochs=epochs, use_pallas=False,
+        n_exact_negatives=8, batch_size=1024, n_epochs=epochs,
     )
     rows = []
     x, _ = gaussian_mixture(N, DIM, n_components=16, seed=0)
@@ -65,7 +67,7 @@ def run(quick: bool = False):
 
     index = build_index(x, cfg)
     t0 = time.time()
-    res = NomadProjection(cfg).fit(x, index=index)
+    res = NomadProjection(cfg, strategy="local").fit(x, index=index)
     wall1 = time.time() - t0
     np10_1 = neighborhood_preservation(x, res.embedding, k=10, n_queries=600)
 

@@ -24,7 +24,6 @@ def main():
     import jax
 
     from repro.configs.base import NomadConfig
-    from repro.core.distributed import fit_distributed
     from repro.core.nomad import NomadProjection
     from repro.data.synthetic import gaussian_mixture
     from repro.index.ann import build_index
@@ -37,29 +36,32 @@ def main():
     cfg = NomadConfig(
         n_points=n, dim=dim, n_clusters=16, n_neighbors=15, n_noise=48,
         n_exact_negatives=8, batch_size=1024, n_epochs=30,
-        use_pallas=False, hierarchical=hier,
     )
     print("building index …")
     index = build_index(x, cfg)
 
     print("single-device reference …")
     t0 = time.time()
-    ref = NomadProjection(cfg).fit(x, index=index)
+    ref = NomadProjection(cfg, strategy="local").fit(x, index=index)
     t_ref = time.time() - t0
 
+    # same estimator, different execution strategy — the whole migration
+    # from the old fit_distributed() free function is these two kwargs
     if hier:
         mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
-        pod_axis = "pod"
+        proj = NomadProjection(cfg, strategy="hierarchical", mesh=mesh, pod_axis="pod")
         print("8 shards, hierarchical (pod super-means across the slow axis) …")
     else:
         mesh = make_mesh((2, 4), ("data", "model"))
-        pod_axis = None
+        proj = NomadProjection(cfg, strategy="sharded", mesh=mesh)
         print("8 shards, flat mean exchange (the paper's strategy) …")
     t0 = time.time()
-    emb, _, losses = fit_distributed(cfg, x, mesh, pod_axis=pod_axis, index=index)
+    dist = proj.fit(x, index=index)
     t_dist = time.time() - t0
+    print(f"ran as strategy={dist.strategy} on mesh {dist.mesh_shape} "
+          f"({dist.n_shards} shards)")
 
-    for name, e, t in (("1-device", ref.embedding, t_ref), ("8-shard", emb, t_dist)):
+    for name, e, t in (("1-device", ref.embedding, t_ref), ("8-shard", dist.embedding, t_dist)):
         np10 = neighborhood_preservation(x, e, k=10, n_queries=800)
         rta = random_triplet_accuracy(x, e, 20_000)
         print(f"{name:9s}: {t:6.1f}s  NP@10={np10:.4f}  triplet={rta:.4f}")

@@ -70,17 +70,17 @@ def main():
     ncfg = NomadConfig(
         n_points=n_docs, dim=vecs.shape[1], n_clusters=8, n_neighbors=15,
         n_noise=32, n_exact_negatives=8, batch_size=512, n_epochs=30,
-        use_pallas=True,
+        kernel_impl="auto",  # registry picks pallas vs jnp per backend
     )
-    res = NomadProjection(ncfg).fit(vecs)
-    np10 = neighborhood_preservation(vecs, res.embedding, k=10, n_queries=500)
-    rta = random_triplet_accuracy(vecs, res.embedding, 10_000)
+    emb = NomadProjection(ncfg).fit_transform(vecs)
+    np10 = neighborhood_preservation(vecs, emb, k=10, n_queries=500)
+    rta = random_triplet_accuracy(vecs, emb, 10_000)
     # do documents of the same class land together?
     import jax.numpy as jnp
 
     from repro.metrics.neighborhood import _topk_neighbors
 
-    nb = np.asarray(_topk_neighbors(jnp.asarray(res.embedding[:400]), jnp.asarray(res.embedding), 10))
+    nb = np.asarray(_topk_neighbors(jnp.asarray(emb[:400]), jnp.asarray(emb), 10))
     purity = float(np.mean(classes[nb] == classes[:400, None]))
     print(f"map quality: NP@10={np10:.4f} triplet={rta:.4f} class-purity={purity:.3f}")
     assert purity > 0.5, "document classes did not separate"

@@ -1,13 +1,19 @@
 """Quickstart: map a synthetic embedding corpus with NOMAD Projection.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--n 10000] [--epochs 40]
 
 Builds the LSH-initialised K-means ANN index, runs the NOMAD optimisation
-(PCA init, lr n/10 linearly annealed — the paper's §3.4 recipe), reports
-NP@10 / triplet accuracy, and writes an ASCII density sketch of the map —
-the terminal cousin of the paper's Figure 1.
+(PCA init, lr n/10 linearly annealed — the paper's §3.4 recipe) through the
+unified ``NomadProjection`` estimator (``strategy="auto"`` picks local vs
+sharded from ``jax.devices()``), streams progress via the event API,
+reports NP@10 / triplet accuracy, and writes an ASCII density sketch of the
+map — the terminal cousin of the paper's Figure 1.
+
+The ``--n 1500 --epochs 4`` point is the CI smoke test: the full public API
+path (index → strategy → events → FitResult) at tiny N on CPU.
 """
 
+import argparse
 import sys
 
 sys.path.insert(0, "src")
@@ -16,6 +22,7 @@ import numpy as np
 
 from repro.configs.base import NomadConfig
 from repro.core.nomad import NomadProjection
+from repro.core.strategy import FitCallbacks
 from repro.data.synthetic import gaussian_mixture
 from repro.metrics import neighborhood_preservation, random_triplet_accuracy
 
@@ -30,29 +37,57 @@ def ascii_density(emb: np.ndarray, labels: np.ndarray, w: int = 72, h: int = 24)
     return "\n".join("".join(row) for row in grid)
 
 
+class Progress(FitCallbacks):
+    """Structured fit events: loss curve + checkpoint notices."""
+
+    wants_embedding = False  # loss/time only — skip the per-epoch host copy
+
+    def on_epoch_end(self, ev):
+        if ev.epoch % 10 == 0 or ev.epoch == ev.n_epochs - 1:
+            print(f"  epoch {ev.epoch:3d}/{ev.n_epochs}  loss {ev.loss:.4f}  "
+                  f"({ev.time_s:.2f}s, {ev.strategy})")
+
+    def on_checkpoint(self, ev):
+        print(f"  checkpoint @ epoch {ev.epoch} → {ev.directory}")
+
+
 def main():
-    n, dim, comps = 10_000, 64, 12
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=10_000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--epochs", type=int, default=40)
+    ap.add_argument("--clusters", type=int, default=16)
+    ap.add_argument("--checkpoint-dir", default="", help="enable checkpoint/resume")
+    args = ap.parse_args()
+
+    n, dim, comps = args.n, args.dim, 12
     print(f"generating {n} points, {dim}-d, {comps} clusters …")
     x, labels = gaussian_mixture(n, dim, n_components=comps, seed=0)
 
     cfg = NomadConfig(
         n_points=n, dim=dim,
-        n_clusters=16, n_neighbors=15,            # §3.2 index
-        n_noise=48, n_exact_negatives=8,          # §3.3 loss
-        batch_size=1024, n_epochs=40,             # §3.4 schedule (lr0 = n/10)
-        use_pallas=True,
+        n_clusters=args.clusters, n_neighbors=15,    # §3.2 index
+        n_noise=48, n_exact_negatives=8,             # §3.3 loss
+        batch_size=min(1024, n), n_epochs=args.epochs,  # §3.4 schedule (lr0 = n/10)
+        strategy="auto",                             # local vs sharded, from devices
+        checkpoint_dir=args.checkpoint_dir,
     )
     print("fitting NOMAD Projection …")
-    res = NomadProjection(cfg).fit(x)
+    res = NomadProjection(cfg).fit(x, callbacks=Progress())
     print(f"done in {res.wall_time_s:.1f}s "
-          f"({np.mean(res.epoch_times[1:]):.2f}s/epoch after warmup)")
+          f"({np.mean(res.epoch_times[1:] or res.epoch_times):.2f}s/epoch after warmup) "
+          f"[strategy={res.strategy}, shards={res.n_shards}]")
     print(f"loss {res.losses[0]:.4f} → {res.losses[-1]:.4f}")
 
-    np10 = neighborhood_preservation(x, res.embedding, k=10, n_queries=1000)
+    np10 = neighborhood_preservation(x, res.embedding, k=10, n_queries=min(1000, n))
     rta = random_triplet_accuracy(x, res.embedding, 20_000)
     print(f"NP@10 = {np10:.4f}   random-triplet accuracy = {rta:.4f}")
+    chance = 10 / n
+    assert np10 > 3 * chance, f"map no better than chance (NP@10={np10:.4f})"
+    assert np.isfinite(res.embedding).all()
     print("\nmap (digits = cluster labels):")
     print(ascii_density(res.embedding, labels))
+    print("OK")
 
 
 if __name__ == "__main__":

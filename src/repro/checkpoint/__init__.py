@@ -1,3 +1,3 @@
-from repro.checkpoint.checkpointer import Checkpointer, latest_step
+from repro.checkpoint.checkpointer import Checkpointer, latest_step, load_metadata
 
-__all__ = ["Checkpointer", "latest_step"]
+__all__ = ["Checkpointer", "latest_step", "load_metadata"]

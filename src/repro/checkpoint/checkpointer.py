@@ -164,6 +164,20 @@ class Checkpointer:
         return tree, manifest["metadata"]
 
 
+def load_metadata(directory: str, step: Optional[int] = None) -> dict:
+    """User metadata of one checkpoint (latest by default) — no array I/O."""
+    steps = [
+        int(n.split("_")[1])
+        for n in os.listdir(directory)
+        if n.startswith("step_") and not n.endswith(".tmp")
+    ]
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    step = max(steps) if step is None else step
+    with open(os.path.join(directory, f"step_{step:09d}", "manifest.json")) as f:
+        return json.load(f)["metadata"]
+
+
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None

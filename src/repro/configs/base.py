@@ -18,6 +18,7 @@ all LM archs; each arch declares which cells it supports via
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -256,6 +257,10 @@ class NomadConfig:
     dim: int = 256
     out_dim: int = 2
 
+    # estimator (repro.core.nomad.NomadProjection)
+    method: str = "nomad"  # "nomad" (Eq. 3) | "infonc" (Eq. 2 baseline, local only)
+    strategy: str = "auto"  # "auto" | "local" | "sharded" | "hierarchical"
+
     # ANN index (paper §3.2): LSH-initialised K-means, exact kNN in-cluster
     n_clusters: int = 64
     kmeans_iters: int = 25
@@ -282,16 +287,33 @@ class NomadConfig:
     hierarchical: bool = False  # pod-level super-means across the slow axis
     n_cluster_groups: int = 0  # super-mean groups (0 => one per pod shard)
 
-    # kernel dispatch (repro.kernels.registry): "" defers to the legacy
-    # ``use_pallas`` switch; "auto" lets the registry pick per backend
-    # (tpu/gpu → pallas, cpu → jnp; REPRO_KERNELS / REPRO_KERNEL_<NAME>
-    # env vars override); "pallas"/"jnp" force one path everywhere.
+    # kernel dispatch (repro.kernels.registry): "" defers to "auto" — the
+    # registry picks per backend (tpu/gpu → pallas, cpu → jnp;
+    # REPRO_KERNELS / REPRO_KERNEL_<NAME> env vars override);
+    # "pallas"/"jnp" force one path everywhere.
     kernel_impl: str = ""
-    use_pallas: bool = True  # legacy switch; ``kernel_impl`` supersedes it
+    # DEPRECATED: setting it emits a DeprecationWarning; use kernel_impl.
+    use_pallas: Optional[bool] = None
 
     # fault tolerance
     checkpoint_every_epochs: int = 5
     checkpoint_dir: str = ""
+
+    def __post_init__(self) -> None:
+        if self.method not in ("nomad", "infonc"):
+            raise ValueError(f"unknown method {self.method!r} (want 'nomad'|'infonc')")
+        if self.strategy not in ("auto", "local", "sharded", "hierarchical"):
+            raise ValueError(
+                f"unknown strategy {self.strategy!r} "
+                "(want 'auto'|'local'|'sharded'|'hierarchical')"
+            )
+        if self.use_pallas is not None:
+            warnings.warn(
+                "NomadConfig.use_pallas is deprecated; use "
+                "kernel_impl='auto'|'pallas'|'jnp' instead",
+                DeprecationWarning,
+                stacklevel=3,
+            )
 
     def resolved_lr0(self) -> float:
         return self.lr0 if self.lr0 > 0 else self.n_points / 10.0
@@ -300,6 +322,8 @@ class NomadConfig:
         """The registry ``impl`` argument this run dispatches kernels with."""
         if self.kernel_impl:
             return self.kernel_impl
+        if self.use_pallas is None:
+            return "auto"
         return "auto" if self.use_pallas else "jnp"
 
     def resolved_steps_per_epoch(self) -> int:

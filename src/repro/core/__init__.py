@@ -1,6 +1,19 @@
 from repro.core.cauchy import cauchy, cauchy_pairwise
 from repro.core.losses import contrastive_loss, infonc_tsne_loss, nomad_loss
 from repro.core.nomad import FitResult, NomadProjection, make_epoch_fn, make_step_fn
+from repro.core.strategy import (
+    CallbackList,
+    CheckpointEvent,
+    EpochEndEvent,
+    EpochStartEvent,
+    ExecutionStrategy,
+    FitCallbacks,
+    HierarchicalStrategy,
+    LocalStrategy,
+    MeansRefreshEvent,
+    ShardedStrategy,
+    resolve_strategy,
+)
 from repro.core.pca import pca_init
 
 __all__ = [
@@ -14,4 +27,16 @@ __all__ = [
     "make_step_fn",
     "make_epoch_fn",
     "pca_init",
+    # execution strategies + event API
+    "ExecutionStrategy",
+    "LocalStrategy",
+    "ShardedStrategy",
+    "HierarchicalStrategy",
+    "resolve_strategy",
+    "FitCallbacks",
+    "CallbackList",
+    "EpochStartEvent",
+    "EpochEndEvent",
+    "MeansRefreshEvent",
+    "CheckpointEvent",
 ]

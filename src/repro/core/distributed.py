@@ -17,6 +17,11 @@ Two exchange modes:
 
 The SGD step body is ``repro.core.nomad.make_step_fn`` — identical math to
 the single-device reference, which is what the equivalence test checks.
+
+Host-side orchestration lives in the unified estimator now
+(:class:`repro.core.nomad.NomadProjection` + ``repro.core.strategy``); this
+module provides the ``shard_map`` epoch function those strategies wrap, and
+keeps :func:`fit_distributed` as a deprecation shim.
 """
 
 from __future__ import annotations
@@ -28,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import NomadConfig
 from repro.core import losses
@@ -160,7 +165,8 @@ def make_sharded_epoch_fn(
     def epoch(theta_l, idx_l, counts_global, lr0, lr1, key):
         shard_idx, _ = shard_index_and_count(mesh, all_axes)
         shard_off = shard_idx * Kl
-        key = jax.random.fold_in(key, shard_idx)
+        if n_shards > 1:  # decorrelate shards; 1 shard matches the local stream
+            key = jax.random.fold_in(key, shard_idx)
         counts_l = idx_l["counts"]
 
         def chunk_body(carry, c):
@@ -244,54 +250,28 @@ def fit_distributed(
     theta0=None,
     callback=None,
 ):
-    """End-to-end distributed fit on ``mesh`` (used by launch/train.py)."""
+    """DEPRECATED shim — use the unified estimator instead:
+
+        NomadProjection(cfg, strategy="sharded", mesh=mesh).fit(x)
+
+    Delegates to :class:`repro.core.nomad.NomadProjection` and returns the
+    legacy ``(embedding, index, losses)`` tuple. Note the legacy ``callback``
+    now receives the *unpermuted* ``(N, out_dim)`` embedding, not the raw
+    sharded θ buffer.
+    """
+    import warnings
+
+    warnings.warn(
+        "fit_distributed is deprecated; use "
+        "NomadProjection(cfg, strategy='sharded'|'hierarchical', mesh=mesh).fit(x)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     from repro.core.nomad import NomadProjection
-    from repro.index.ann import build_index
 
-    if index is None:
-        index = build_index(x, cfg)
-    n_shards = int(np.prod([mesh.shape[a] for a in shard_axes])) * (
-        mesh.shape[pod_axis] if pod_axis else 1
+    strategy = "hierarchical" if (cfg.hierarchical and pod_axis) else "sharded"
+    est = NomadProjection(
+        cfg, strategy=strategy, mesh=mesh, shard_axes=shard_axes, pod_axis=pod_axis
     )
-    idx = shard_index_arrays(index, n_shards)
-    if theta0 is None:
-        theta0 = NomadProjection(cfg)._init_theta(x, index)
-
-    axes = ((pod_axis,) if pod_axis else ()) + tuple(shard_axes)
-    row_sharding = NamedSharding(mesh, P(axes, None))
-    vec_sharding = NamedSharding(mesh, P(axes))
-    theta = jax.device_put(theta0, row_sharding)
-    idx = {
-        "knn_idx": jax.device_put(idx["knn_idx"], row_sharding),
-        "knn_w": jax.device_put(idx["knn_w"], row_sharding),
-        "counts": jax.device_put(idx["counts"], vec_sharding),
-        "cum_counts": jax.device_put(idx["cum_counts"], vec_sharding),
-    }
-    counts_global = jnp.asarray(index.counts, jnp.float32)
-
-    # keep per-epoch sample volume ≈ N: shards work in parallel, so each
-    # runs 1/n_shards of the single-device step count (the wall-clock win).
-    steps = max(1, -(-cfg.resolved_steps_per_epoch() // n_shards))
-    epoch_fn = make_sharded_epoch_fn(
-        cfg,
-        mesh,
-        shard_axes=shard_axes,
-        pod_axis=pod_axis,
-        steps_per_epoch=steps,
-        n_shards=n_shards,
-    )
-    epoch_fn = jax.jit(epoch_fn)
-    lr0 = cfg.resolved_lr0()
-    key = jax.random.key(cfg.seed + 1)
-    losses_ = []
-    for e in range(cfg.n_epochs):
-        f0 = 1.0 - e / cfg.n_epochs
-        f1 = 1.0 - (e + 1) / cfg.n_epochs
-        theta, ml = epoch_fn(
-            theta, idx, counts_global, lr0 * f0, lr0 * f1, jax.random.fold_in(key, e)
-        )
-        losses_.append(float(ml))
-        if callback is not None:
-            callback(e, theta, losses_[-1])
-    emb = index.unpermute(np.asarray(theta))
-    return emb, index, losses_
+    res = est.fit(x, index=index, callback=callback, theta0=theta0)
+    return res.embedding, res.index, res.losses

@@ -19,7 +19,6 @@ marginal P_i); noise tails uniform over points (uniform ξ); |M| = n_noise.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Callable, Optional
 
@@ -178,7 +177,7 @@ def make_epoch_fn(cfg: NomadConfig, step_fn, steps_per_epoch: int):
 
 
 # ---------------------------------------------------------------------------
-# Fit driver (single-device reference; distributed lives in core/distributed)
+# Fit driver — one estimator, every scale (execution lives in core/strategy)
 # ---------------------------------------------------------------------------
 
 
@@ -189,62 +188,282 @@ class FitResult:
     losses: list
     wall_time_s: float
     epoch_times: list
+    # execution provenance
+    strategy: str = "local"
+    n_shards: int = 1
+    mesh_shape: Optional[tuple] = None
+    mesh_axes: Optional[tuple] = None
+    # checkpoint/resume provenance
+    start_epoch: int = 0
+    resumed: bool = False
+    checkpoint_dir: str = ""
+    checkpoint_epochs: list = dataclasses.field(default_factory=list)
+
+
+def _config_digest(cfg: NomadConfig) -> dict:
+    """The config fields a checkpoint must agree on to resume bit-exactly."""
+    d = dataclasses.asdict(cfg)
+    for transient in ("checkpoint_dir", "checkpoint_every_epochs", "use_pallas", "kernel_impl"):
+        d.pop(transient, None)
+    return d
 
 
 class NomadProjection:
-    """scikit-style front end: ``NomadProjection(cfg).fit(x)``."""
+    """The unified scikit-style front end: ``NomadProjection(cfg).fit(x)``.
 
-    def __init__(self, cfg: NomadConfig, method: str = "nomad"):
+    One estimator covers every scale. ``strategy`` (ctor arg, default
+    ``cfg.strategy``) selects how epochs execute — ``"auto"`` resolves from
+    ``jax.devices()``; ``"local"`` / ``"sharded"`` / ``"hierarchical"`` force
+    a mode; an :class:`repro.core.strategy.ExecutionStrategy` instance plugs
+    in a custom one. All paths return the same enriched :class:`FitResult`.
+
+    Progress streams through the structured event API
+    (:class:`repro.core.strategy.FitCallbacks`): ``on_epoch_start``,
+    ``on_epoch_end`` (with the *unpermuted* ``(N, out_dim)`` embedding),
+    ``on_means_refresh``, ``on_checkpoint``.
+
+    With ``cfg.checkpoint_dir`` set, θ is checkpointed every
+    ``cfg.checkpoint_every_epochs`` epochs (atomic commit; the ANN index is
+    cached beside it), and a killed run continues with
+    ``NomadProjection.from_checkpoint(dir).fit(x)`` — same fold_in schedule,
+    so the result matches an uninterrupted run.
+    """
+
+    def __init__(
+        self,
+        cfg: NomadConfig,
+        method: Optional[str] = None,
+        *,
+        strategy=None,
+        mesh=None,
+        shard_axes=None,
+        pod_axis=None,
+    ):
         self.cfg = cfg
-        self.method = method
+        self.method = method or cfg.method
+        self.strategy = strategy if strategy is not None else cfg.strategy
+        self.mesh = mesh
+        self.shard_axes = shard_axes
+        self.pod_axis = pod_axis
+        self._resume_default = False
+
+    # -- constructors ----------------------------------------------------------
+
+    @classmethod
+    def from_checkpoint(
+        cls, checkpoint_dir: str, cfg: Optional[NomadConfig] = None, **overrides
+    ) -> "NomadProjection":
+        """Rebuild the estimator a checkpoint directory was written by.
+
+        The returned estimator resumes by default: ``.fit(x)`` restores the
+        latest θ + epoch and continues to ``cfg.n_epochs``. Pass field
+        ``overrides`` (or a full ``cfg``) to alter the continuation.
+        """
+        from repro.checkpoint.checkpointer import load_metadata
+
+        meta = load_metadata(checkpoint_dir)
+        if cfg is None:
+            if "config" not in meta:
+                raise ValueError(
+                    f"checkpoint under {checkpoint_dir} has no stored config "
+                    "(written by a pre-unified-API launcher?) — pass cfg= "
+                    "explicitly to resume it"
+                )
+            stored = dict(meta["config"])
+            stored.update(checkpoint_dir=checkpoint_dir, **overrides)
+            cfg = NomadConfig(**stored)
+        est = cls(cfg, method=meta.get("method"))
+        est._resume_default = True
+        return est
+
+    # -- the one fit ----------------------------------------------------------
 
     def fit(
         self,
         x: np.ndarray,
         index: "Optional[AnnIndex]" = None,
         callback: Optional[Callable] = None,
+        *,
+        callbacks=None,
+        resume: Optional[bool] = None,
+        theta0=None,
     ) -> FitResult:
-        from repro.index.ann import build_index
+        """Fit the map. ``resume=True`` continues from ``cfg.checkpoint_dir``.
+
+        ``callback`` is the deprecated bare ``fn(epoch, embedding, loss)``
+        form; prefer ``callbacks=`` with a
+        :class:`repro.core.strategy.FitCallbacks`.
+        """
+        import os
+        import warnings
+
+        from repro.core.strategy import (
+            CheckpointEvent,
+            EpochEndEvent,
+            EpochStartEvent,
+            MeansRefreshEvent,
+            as_callbacks,
+            resolve_strategy,
+        )
+        from repro.index.ann import (
+            build_index,
+            index_cache_path,
+            load_index,
+            save_index,
+        )
 
         cfg = self.cfg
         t0 = time.time()
+        events = as_callbacks(callbacks, callback)
+        resume = self._resume_default if resume is None else resume
+        ckdir = cfg.checkpoint_dir
+        if resume and not ckdir:
+            raise ValueError("resume=True needs cfg.checkpoint_dir to be set")
+
+        # ---- index: argument > on-disk cache > fresh build --------------------
+        index_cache = index_cache_path(ckdir) if ckdir else ""
+        cache_stale = False
+        if index is None and index_cache and os.path.exists(index_cache):
+            cached = load_index(index_cache)
+            # a stale cache (checkpoint_dir reused across datasets) must not
+            # silently replace the data the caller passed in
+            if cached.n_points == x.shape[0] and cached.x_rows.shape[1] == x.shape[1]:
+                index = cached
+            else:
+                cache_stale = True
+                warnings.warn(
+                    f"ignoring index cache {index_cache}: built for "
+                    f"({cached.n_points}, {cached.x_rows.shape[1]}) data, "
+                    f"got {x.shape} — rebuilding"
+                )
         if index is None:
             index = build_index(x, cfg)
-        theta = self._init_theta(x, index)
+        if index_cache and (cache_stale or not os.path.exists(index_cache)):
+            os.makedirs(ckdir, exist_ok=True)
+            save_index(index, index_cache)
 
-        idx = {
-            "knn_idx": jnp.asarray(index.knn_idx, jnp.int32),
-            "knn_w": jnp.asarray(index.knn_w, jnp.float32),
-            "counts": jnp.asarray(index.counts, jnp.int32),
-            "cum_counts": jnp.asarray(np.cumsum(index.counts), jnp.int32),
-        }
-        steps = cfg.resolved_steps_per_epoch()
-        step_fn = make_step_fn(cfg, method=self.method)
-        epoch_fn = make_epoch_fn(cfg, step_fn, steps)
+        # ---- θ: resume from checkpoint > warm start > fresh init --------------
+        start_epoch, resumed = 0, False
+        if resume:
+            from repro.checkpoint import Checkpointer, latest_step
 
+            if latest_step(ckdir) is not None:
+                shape = (index.n_clusters * index.capacity, cfg.out_dim)
+                skeleton = {"theta": np.zeros(shape, np.float32)}
+                tree, meta = Checkpointer(ckdir).restore(skeleton)
+                theta0 = tree["theta"]
+                start_epoch = int(meta["epoch"]) + 1
+                resumed = True
+                stored = meta.get("config")
+                if stored is not None and {
+                    k: v for k, v in stored.items()
+                    if k in _config_digest(cfg)
+                } != _config_digest(cfg):
+                    warnings.warn(
+                        "resuming with a config that differs from the one the "
+                        "checkpoint was written with — the continued run will "
+                        "not match an uninterrupted one"
+                    )
+        if theta0 is None:
+            theta0 = self._init_theta(x, index)
+
+        # ---- strategy ------------------------------------------------------------
+        strategy = resolve_strategy(
+            self.strategy,
+            cfg,
+            method=self.method,
+            mesh=self.mesh,
+            shard_axes=self.shard_axes,
+            pod_axis=self.pod_axis,
+        )
+        theta = strategy.prepare(cfg, self.method, index, theta0)
+
+        ckpt = None
+        if ckdir:
+            from repro.checkpoint import Checkpointer
+
+            ckpt = Checkpointer(
+                ckdir, n_shards=strategy.n_shards, keep=3, async_save=True
+            )
+        every = max(1, cfg.checkpoint_every_epochs)
+
+        # ---- the one epoch loop ---------------------------------------------------
         lr0 = cfg.resolved_lr0()
         key = jax.random.key(cfg.seed + 1)
-        losses_, epoch_times = [], []
-        for e in range(cfg.n_epochs):
-            te = time.time()
-            frac0 = 1.0 - e / cfg.n_epochs
-            frac1 = 1.0 - (e + 1) / cfg.n_epochs
-            theta, mloss = epoch_fn(
-                theta, idx, lr0 * frac0, lr0 * frac1, jax.random.fold_in(key, e)
-            )
-            mloss = float(mloss)
-            losses_.append(mloss)
-            epoch_times.append(time.time() - te)
-            if callback is not None:
-                callback(e, np.asarray(theta), mloss)
+        losses_, epoch_times, checkpoint_epochs = [], [], []
+        try:
+            for e in range(start_epoch, cfg.n_epochs):
+                te = time.time()
+                f0 = 1.0 - e / cfg.n_epochs
+                f1 = 1.0 - (e + 1) / cfg.n_epochs
+                if events is not None:
+                    events.on_epoch_start(
+                        EpochStartEvent(e, cfg.n_epochs, lr0 * f0, lr0 * f1, strategy.name)
+                    )
+                theta, mloss = strategy.run_epoch(
+                    theta, e, lr0 * f0, lr0 * f1, jax.random.fold_in(key, e)
+                )
+                losses_.append(mloss)
+                epoch_times.append(time.time() - te)
+
+                if ckpt is not None and ((e + 1) % every == 0 or e == cfg.n_epochs - 1):
+                    ckpt.save(
+                        e,
+                        {"theta": np.asarray(theta)},
+                        sharded_keys=("theta",),
+                        metadata={
+                            "epoch": e,
+                            "config": dataclasses.asdict(cfg),
+                            "method": self.method,
+                            "strategy": strategy.name,
+                            # snapshot: the async writer must not see later appends
+                            "losses": list(losses_),
+                        },
+                    )
+                    checkpoint_epochs.append(e)
+                    if events is not None:
+                        events.on_checkpoint(
+                            CheckpointEvent(e, e, ckdir, strategy.n_shards)
+                        )
+                if events is not None:
+                    events.on_means_refresh(
+                        MeansRefreshEvent(e, strategy.refreshes_per_epoch(), strategy.name)
+                    )
+                    emb_e = (
+                        index.unpermute(np.asarray(theta))
+                        if events.wants_embedding
+                        else None
+                    )
+                    events.on_epoch_end(
+                        EpochEndEvent(
+                            e, cfg.n_epochs, mloss, epoch_times[-1], strategy.name, emb_e
+                        )
+                    )
+        finally:
+            if ckpt is not None:
+                ckpt.wait()  # commit the in-flight save even on interruption
+
         emb = index.unpermute(np.asarray(theta))
+        meta = strategy.describe()
         return FitResult(
             embedding=emb,
             index=index,
             losses=losses_,
             wall_time_s=time.time() - t0,
             epoch_times=epoch_times,
+            strategy=meta["strategy"],
+            n_shards=meta["n_shards"],
+            mesh_shape=meta["mesh_shape"],
+            mesh_axes=meta["mesh_axes"],
+            start_epoch=start_epoch,
+            resumed=resumed,
+            checkpoint_dir=ckdir,
+            checkpoint_epochs=checkpoint_epochs,
         )
+
+    def fit_transform(self, x: np.ndarray, **kwargs) -> np.ndarray:
+        """``fit(...)`` and return just the ``(N, out_dim)`` embedding."""
+        return self.fit(x, **kwargs).embedding
 
     def _init_theta(self, x: np.ndarray, index: "AnnIndex") -> jax.Array:
         cfg = self.cfg

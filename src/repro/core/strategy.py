@@ -1,0 +1,422 @@
+"""Pluggable execution strategies for the unified ``NomadProjection`` front end.
+
+One estimator, every scale: the estimator owns the epoch loop, callbacks and
+checkpointing; a strategy owns *where and how one epoch runs*:
+
+* :class:`LocalStrategy`        — single device, ``make_epoch_fn`` (the
+  paper's single-GPU reference; the only strategy that supports the
+  non-factorising ``"infonc"`` baseline).
+* :class:`ShardedStrategy`      — the paper's Fig. 2 multi-device mode:
+  cluster-sharded ``shard_map`` epochs with a flat per-refresh all-gather of
+  cell means (``core/distributed.py:make_sharded_epoch_fn``).
+* :class:`HierarchicalStrategy` — the multi-pod extension: full means
+  circulate intra-pod, remote pods are summarised by one super-mean each.
+
+``resolve_strategy("auto", cfg, ...)`` picks for you from ``jax.devices()``
+and the config: one device → local; several devices → sharded over the
+largest cluster-divisible device count (hierarchical when
+``cfg.hierarchical`` and a 2-pod mesh fits). Every strategy consumes the
+same global cluster-major ``theta`` view and returns per-epoch
+``(theta, loss)``, so checkpoints written under one strategy restore under
+any other (elastic resume).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import NomadConfig
+
+
+# ---------------------------------------------------------------------------
+# Event API
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EpochStartEvent:
+    epoch: int
+    n_epochs: int
+    lr0: float  # lr at the first step of this epoch
+    lr1: float  # lr at the last step of this epoch
+    strategy: str
+
+
+@dataclasses.dataclass
+class EpochEndEvent:
+    epoch: int
+    n_epochs: int
+    loss: float
+    time_s: float
+    strategy: str
+    # (N, out_dim) in the ORIGINAL point order — never the raw cluster-major
+    # capacity-padded buffer. None when no consumer asked for embeddings.
+    embedding: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class MeansRefreshEvent:
+    epoch: int
+    n_refreshes: int  # mean refreshes performed inside this epoch
+    strategy: str
+
+
+@dataclasses.dataclass
+class CheckpointEvent:
+    epoch: int
+    step: int  # checkpoint step id (== epoch)
+    directory: str
+    n_shards: int
+
+
+class FitCallbacks:
+    """Structured fit events. Subclass and override what you need.
+
+    ``wants_embedding`` controls whether :attr:`EpochEndEvent.embedding` is
+    materialised (an O(N·d) device→host copy + unpermute per epoch); set it
+    to False for cheap loss/time-only observers on big runs.
+    """
+
+    wants_embedding: bool = True
+
+    def on_epoch_start(self, event: EpochStartEvent) -> None: ...
+
+    def on_epoch_end(self, event: EpochEndEvent) -> None: ...
+
+    def on_means_refresh(self, event: MeansRefreshEvent) -> None: ...
+
+    def on_checkpoint(self, event: CheckpointEvent) -> None: ...
+
+
+class CallbackList(FitCallbacks):
+    """Fan one event stream out to several callback objects."""
+
+    def __init__(self, callbacks: Sequence[FitCallbacks]):
+        self.callbacks = list(callbacks)
+
+    @property
+    def wants_embedding(self) -> bool:  # type: ignore[override]
+        return any(cb.wants_embedding for cb in self.callbacks)
+
+    def on_epoch_start(self, event):
+        for cb in self.callbacks:
+            cb.on_epoch_start(event)
+
+    def on_epoch_end(self, event):
+        for cb in self.callbacks:
+            cb.on_epoch_end(event)
+
+    def on_means_refresh(self, event):
+        for cb in self.callbacks:
+            cb.on_means_refresh(event)
+
+    def on_checkpoint(self, event):
+        for cb in self.callbacks:
+            cb.on_checkpoint(event)
+
+
+class LegacyCallback(FitCallbacks):
+    """Adapter for the old bare ``callback(epoch, embedding, loss)``.
+
+    Unlike the pre-redesign behaviour (which leaked the raw cluster-major,
+    capacity-padded ``theta`` buffer), the adapter hands the *unpermuted*
+    ``(N, out_dim)`` embedding — the same array ``FitResult.embedding`` ends
+    up with.
+    """
+
+    def __init__(self, fn: Callable):
+        self.fn = fn
+
+    def on_epoch_end(self, event: EpochEndEvent) -> None:
+        self.fn(event.epoch, event.embedding, event.loss)
+
+
+def as_callbacks(
+    callbacks=None, legacy_callback: Optional[Callable] = None
+) -> Optional[FitCallbacks]:
+    """Normalise fit()'s callback arguments into one FitCallbacks (or None)."""
+    out = []
+    if callbacks is not None:
+        if isinstance(callbacks, FitCallbacks):
+            out.append(callbacks)
+        else:  # sequence of FitCallbacks
+            out.extend(callbacks)
+    if legacy_callback is not None:
+        warnings.warn(
+            "fit(callback=...) is deprecated; pass callbacks=FitCallbacks() "
+            "(see repro.core.strategy.FitCallbacks). The legacy callback now "
+            "receives the unpermuted (N, out_dim) embedding.",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        out.append(LegacyCallback(legacy_callback))
+    if not out:
+        return None
+    return out[0] if len(out) == 1 else CallbackList(out)
+
+
+# ---------------------------------------------------------------------------
+# Strategies
+# ---------------------------------------------------------------------------
+
+
+class ExecutionStrategy:
+    """Where/how one NOMAD epoch runs. Stateful: ``prepare`` then ``run_epoch``."""
+
+    name: str = "?"
+
+    def __init__(self) -> None:
+        self.n_shards: int = 1
+        self.mesh: Optional[Mesh] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def prepare(self, cfg: NomadConfig, method: str, index, theta0) -> jax.Array:
+        """Place ``theta0``/index on device(s), build the epoch fn; return theta."""
+        raise NotImplementedError
+
+    def run_epoch(self, theta, epoch: int, lr0: float, lr1: float, key):
+        """One epoch: ``(theta, lr schedule, rng) -> (theta, mean_loss)``."""
+        raise NotImplementedError
+
+    # -- introspection ---------------------------------------------------------
+
+    def refreshes_per_epoch(self) -> int:
+        steps = self._steps
+        refresh = self._refresh
+        return max(1, -(-steps // refresh))
+
+    def describe(self) -> dict:
+        return {
+            "strategy": self.name,
+            "n_shards": self.n_shards,
+            "mesh_shape": tuple(self.mesh.shape.values()) if self.mesh else None,
+            "mesh_axes": tuple(self.mesh.axis_names) if self.mesh else None,
+        }
+
+
+class LocalStrategy(ExecutionStrategy):
+    """Single-device reference loop (``core/nomad.py:make_epoch_fn``)."""
+
+    name = "local"
+
+    def prepare(self, cfg, method, index, theta0):
+        from repro.core.nomad import make_epoch_fn, make_step_fn
+
+        self._steps = cfg.resolved_steps_per_epoch()
+        self._refresh = cfg.mean_refresh_steps or self._steps
+        self._idx = {
+            "knn_idx": jnp.asarray(index.knn_idx, jnp.int32),
+            "knn_w": jnp.asarray(index.knn_w, jnp.float32),
+            "counts": jnp.asarray(index.counts, jnp.int32),
+            "cum_counts": jnp.asarray(np.cumsum(index.counts), jnp.int32),
+        }
+        step_fn = make_step_fn(cfg, method=method)
+        self._epoch_fn = make_epoch_fn(cfg, step_fn, self._steps)
+        return jnp.asarray(theta0)
+
+    def run_epoch(self, theta, epoch, lr0, lr1, key):
+        theta, loss = self._epoch_fn(theta, self._idx, lr0, lr1, key)
+        return theta, float(loss)
+
+
+class ShardedStrategy(ExecutionStrategy):
+    """Fig. 2 cluster-sharded ``shard_map`` epochs, flat mean exchange.
+
+    ``mesh=None`` builds a default 1-axis mesh over the largest device count
+    that divides ``cfg.n_clusters``. With a mesh given, ``shard_axes``
+    defaults to every axis except ``pod_axis``.
+    """
+
+    name = "sharded"
+    _hierarchical = False
+
+    def __init__(
+        self,
+        mesh: Optional[Mesh] = None,
+        shard_axes: Optional[Sequence[str]] = None,
+        pod_axis: Optional[str] = None,
+    ):
+        super().__init__()
+        self.mesh = mesh
+        self.shard_axes = tuple(shard_axes) if shard_axes is not None else None
+        self.pod_axis = pod_axis
+
+    def _resolve_mesh(self, cfg: NomadConfig) -> None:
+        if self.mesh is None:
+            self.mesh = default_mesh(cfg, hierarchical=self._hierarchical)
+            self.shard_axes = ("data",)
+            self.pod_axis = "pod" if "pod" in self.mesh.axis_names else None
+        if self.pod_axis is None and "pod" in self.mesh.axis_names and (
+            self.shard_axes is None or "pod" not in self.shard_axes
+        ):
+            self.pod_axis = "pod"
+        if self.shard_axes is None:
+            self.shard_axes = tuple(
+                a for a in self.mesh.axis_names if a != self.pod_axis
+            )
+        uncovered = [
+            a
+            for a in self.mesh.axis_names
+            if a not in self.shard_axes and a != self.pod_axis
+            and self.mesh.shape[a] > 1
+        ]
+        if uncovered:
+            raise ValueError(
+                f"mesh axes {uncovered} are covered by neither shard_axes="
+                f"{self.shard_axes} nor pod_axis={self.pod_axis!r}; θ would be "
+                "silently replicated across them"
+            )
+        n_shards = int(np.prod([self.mesh.shape[a] for a in self.shard_axes]))
+        if self.pod_axis:
+            n_shards *= self.mesh.shape[self.pod_axis]
+        if cfg.n_clusters % n_shards:
+            raise ValueError(
+                f"strategy={self.name!r}: n_clusters={cfg.n_clusters} is not "
+                f"divisible by the {n_shards}-shard mesh "
+                f"{dict(self.mesh.shape)}; pick a compatible mesh or "
+                "strategy='local'"
+            )
+        self.n_shards = n_shards
+
+    def prepare(self, cfg, method, index, theta0):
+        from repro.core.distributed import make_sharded_epoch_fn, shard_index_arrays
+
+        if method != "nomad":
+            raise ValueError(
+                f"method={method!r} only runs with strategy='local' — its loss "
+                "does not factorise over the cluster partition (paper Eq. 2)"
+            )
+        if self._hierarchical:
+            cfg = cfg.replace(hierarchical=True)
+        self._resolve_mesh(cfg)
+        if self._hierarchical and self.pod_axis is None:
+            raise ValueError(
+                "strategy='hierarchical' needs a mesh with a pod axis "
+                "(e.g. axes ('pod', 'data'))"
+            )
+
+        # shards work in parallel, so each runs 1/n_shards of the
+        # single-device step count — per-epoch sample volume stays ≈ N.
+        self._steps = max(1, -(-cfg.resolved_steps_per_epoch() // self.n_shards))
+        self._refresh = cfg.mean_refresh_steps or self._steps
+
+        axes = ((self.pod_axis,) if self.pod_axis else ()) + self.shard_axes
+        row_sh = NamedSharding(self.mesh, P(axes, None))
+        vec_sh = NamedSharding(self.mesh, P(axes))
+        idx = shard_index_arrays(index, self.n_shards)
+        self._idx = {
+            "knn_idx": jax.device_put(idx["knn_idx"], row_sh),
+            "knn_w": jax.device_put(idx["knn_w"], row_sh),
+            "counts": jax.device_put(idx["counts"], vec_sh),
+            "cum_counts": jax.device_put(idx["cum_counts"], vec_sh),
+        }
+        self._counts_global = jnp.asarray(index.counts, jnp.float32)
+        self._epoch_fn = jax.jit(
+            make_sharded_epoch_fn(
+                cfg,
+                self.mesh,
+                shard_axes=self.shard_axes,
+                pod_axis=self.pod_axis,
+                steps_per_epoch=self._steps,
+                n_shards=self.n_shards,
+            )
+        )
+        return jax.device_put(jnp.asarray(theta0), row_sh)
+
+    def run_epoch(self, theta, epoch, lr0, lr1, key):
+        theta, loss = self._epoch_fn(
+            theta, self._idx, self._counts_global, lr0, lr1, key
+        )
+        return theta, float(loss)
+
+
+class HierarchicalStrategy(ShardedStrategy):
+    """Multi-pod mode: intra-pod full means, inter-pod super-means."""
+
+    name = "hierarchical"
+    _hierarchical = True
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+
+def _largest_divisor_leq(k: int, n: int) -> int:
+    for d in range(min(k, n), 0, -1):
+        if k % d == 0:
+            return d
+    return 1
+
+
+def default_mesh(cfg: NomadConfig, *, hierarchical: bool = False) -> Mesh:
+    """A mesh over (a prefix of) ``jax.devices()`` compatible with K clusters."""
+    devs = jax.devices()
+    K = cfg.n_clusters
+    if hierarchical:
+        # 2 pods × the largest per-pod width that keeps K divisible
+        pods = 2
+        per_pod = _largest_divisor_leq(K // pods if K % pods == 0 else 1, len(devs) // pods)
+        if K % pods == 0 and per_pod >= 1 and pods * per_pod <= len(devs):
+            arr = np.asarray(devs[: pods * per_pod]).reshape(pods, per_pod)
+            return Mesh(arr, ("pod", "data"))
+        # fall through to a flat mesh when a 2-pod layout doesn't fit
+    d = _largest_divisor_leq(K, len(devs))
+    return Mesh(np.asarray(devs[:d]).reshape(d), ("data",))
+
+
+def resolve_strategy(
+    spec,
+    cfg: NomadConfig,
+    *,
+    method: Optional[str] = None,
+    mesh: Optional[Mesh] = None,
+    shard_axes: Optional[Sequence[str]] = None,
+    pod_axis: Optional[str] = None,
+) -> ExecutionStrategy:
+    """Turn ``"auto"|"local"|"sharded"|"hierarchical"`` (or an instance) into
+    a ready-to-prepare strategy."""
+    if isinstance(spec, ExecutionStrategy):
+        return spec
+    spec = spec or "auto"
+    method = method or cfg.method
+
+    if spec == "auto":
+        n_dev = len(jax.devices())
+        if mesh is not None:
+            if cfg.hierarchical and "pod" in mesh.axis_names:
+                spec = "hierarchical"
+            else:
+                spec = "sharded"
+        elif method == "infonc" or n_dev == 1:
+            spec = "local"
+        elif _largest_divisor_leq(cfg.n_clusters, n_dev) == 1:
+            warnings.warn(
+                f"strategy='auto': {n_dev} devices share no divisor with "
+                f"n_clusters={cfg.n_clusters}; falling back to strategy='local'"
+            )
+            spec = "local"
+        elif cfg.hierarchical and n_dev >= 4 and cfg.n_clusters % 2 == 0:
+            spec = "hierarchical"
+        else:
+            spec = "sharded"
+
+    if spec == "local":
+        return LocalStrategy()
+    if spec == "sharded":
+        return ShardedStrategy(mesh=mesh, shard_axes=shard_axes, pod_axis=pod_axis)
+    if spec == "hierarchical":
+        return HierarchicalStrategy(
+            mesh=mesh, shard_axes=shard_axes, pod_axis=pod_axis
+        )
+    raise ValueError(
+        f"unknown strategy {spec!r} (want 'auto'|'local'|'sharded'|'hierarchical')"
+    )

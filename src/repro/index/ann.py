@@ -53,6 +53,42 @@ class AnnIndex:
         return rows[self.perm]
 
 
+def index_cache_path(checkpoint_dir: str) -> str:
+    """Where a fit caches its index beside the checkpoints (one convention)."""
+    import os
+
+    return os.path.join(checkpoint_dir, "index.npz")
+
+
+def save_index(index: AnnIndex, path: str) -> None:
+    """Persist an index as one .npz (used as the fit/resume on-disk cache)."""
+    np.savez(
+        path,
+        x_rows=index.x_rows,
+        knn_idx=index.knn_idx,
+        knn_w=index.knn_w,
+        counts=index.counts,
+        centroids=index.centroids,
+        perm=index.perm,
+        capacity=index.capacity,
+        n_points=index.n_points,
+    )
+
+
+def load_index(path: str) -> AnnIndex:
+    z = np.load(path)
+    return AnnIndex(
+        x_rows=z["x_rows"],
+        knn_idx=z["knn_idx"],
+        knn_w=z["knn_w"],
+        counts=z["counts"],
+        centroids=z["centroids"],
+        perm=z["perm"],
+        capacity=int(z["capacity"]),
+        n_points=int(z["n_points"]),
+    )
+
+
 def _np_dist2(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return (
         np.sum(a.astype(np.float32) ** 2, -1)[:, None]

@@ -24,7 +24,6 @@ def main() -> int:
     import jax.numpy as jnp
 
     from repro.configs.base import NomadConfig
-    from repro.core.distributed import fit_distributed
     from repro.core.nomad import NomadProjection
     from repro.data.synthetic import gaussian_mixture
     from repro.index.ann import build_index
@@ -41,16 +40,19 @@ def main() -> int:
         n_exact_negatives=8,
         batch_size=1024,
         n_epochs=15,
-        use_pallas=False,
     )
     index = build_index(x, cfg)
 
     # --- 1. quality parity ---------------------------------------------------
-    ref = NomadProjection(cfg).fit(x, index=index)
+    ref = NomadProjection(cfg, strategy="local").fit(x, index=index)
     np_ref = neighborhood_preservation(x, ref.embedding, k=10, n_queries=400)
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
-    emb, _, losses = fit_distributed(cfg, x, mesh, index=index)
+    dist = NomadProjection(
+        cfg, strategy="sharded", mesh=mesh, shard_axes=("data", "model")
+    ).fit(x, index=index)
+    emb = dist.embedding
+    assert dist.strategy == "sharded" and dist.n_shards == 8, dist
     assert np.isfinite(emb).all(), "distributed embedding has NaNs"
     np_dist = neighborhood_preservation(x, emb, k=10, n_queries=400)
     rta_ref = random_triplet_accuracy(x, ref.embedding, 4000)
@@ -60,21 +62,45 @@ def main() -> int:
     assert rta_dist > 0.8 * rta_ref, (rta_ref, rta_dist)
 
     # --- 2. determinism --------------------------------------------------------
-    emb2, _, _ = fit_distributed(cfg, x, mesh, index=index)
+    emb2 = NomadProjection(
+        cfg, strategy="sharded", mesh=mesh, shard_axes=("data", "model")
+    ).fit_transform(x, index=index)
     assert np.array_equal(emb, emb2), "distributed run is not deterministic"
     print("determinism: OK")
 
+    # --- 2b. the deprecation shim still serves the legacy tuple ----------------
+    import warnings
+
+    from repro.core.distributed import fit_distributed
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        emb_shim, _, _ = fit_distributed(
+            cfg.replace(n_epochs=2), x, mesh, index=index
+        )
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert np.isfinite(emb_shim).all()
+    print("fit_distributed shim: OK (DeprecationWarning emitted)")
+
     # --- 3. hierarchical multi-pod ---------------------------------------------
     mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-    emb_h, _, losses_h = fit_distributed(
-        cfg.replace(hierarchical=True), x, mesh3, pod_axis="pod", index=index
-    )
+    hier = NomadProjection(
+        cfg,
+        strategy="hierarchical",
+        mesh=mesh3,
+        shard_axes=("data", "model"),
+        pod_axis="pod",
+    ).fit(x, index=index)
+    emb_h = hier.embedding
+    assert hier.strategy == "hierarchical" and hier.n_shards == 8, hier
     assert np.isfinite(emb_h).all()
     np_h = neighborhood_preservation(x, emb_h, k=10, n_queries=400)
     print(f"hierarchical NP@10={np_h:.4f} (flat dist={np_dist:.4f})")
     assert np_h > 0.4 * np_ref - 0.01, (np_ref, np_h)
 
-    emb_f, _, _ = fit_distributed(cfg, x, mesh3, pod_axis="pod", index=index)
+    emb_f = NomadProjection(
+        cfg, strategy="sharded", mesh=mesh3, shard_axes=("data", "model"), pod_axis="pod"
+    ).fit_transform(x, index=index)
     assert np.isfinite(emb_f).all()
 
     # --- 4. distributed K-means ≡ reference EM ---------------------------------

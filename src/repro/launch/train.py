@@ -1,11 +1,13 @@
 """NOMAD Projection end-to-end training launcher (deliverable b's driver).
 
-Fault-tolerant distributed fit:
+A thin CLI over the unified estimator — everything fault-tolerant lives in
+``NomadProjection.fit`` now:
 
 * index build (K-means + in-cluster kNN) is cached on disk next to the
   checkpoint dir — on restart the index is reloaded, not rebuilt;
 * one checkpoint per ``--checkpoint-every`` epochs (atomic commit, async);
-* ``--resume`` restores θ + epoch + RNG stream and continues bit-exactly;
+* ``--resume`` restores θ + epoch and continues bit-exactly (same
+  ``fold_in`` schedule as the uninterrupted run);
 * **elastic**: the checkpoint stores the global θ row-block, so a run
   started on N devices restores onto any other divisor count (node loss →
   restart smaller; scale-up → restart bigger). Cluster blocks re-shard
@@ -25,7 +27,6 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -56,16 +57,14 @@ def main(argv=None) -> int:
         )
 
     import jax
-    import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.checkpoint import Checkpointer, latest_step
+    from repro.checkpoint import latest_step, load_metadata
     from repro.configs import get_nomad
-    from repro.core.distributed import make_sharded_epoch_fn, shard_index_arrays
     from repro.core.nomad import NomadProjection
+    from repro.core.strategy import FitCallbacks
     from repro.data.synthetic import hierarchical_mixture
-    from repro.index.ann import build_index
+    from repro.index.ann import build_index, index_cache_path, load_index, save_index
     from repro.launch.mesh import make_mesh
 
     cfg = get_nomad(args.workload)
@@ -75,6 +74,10 @@ def main(argv=None) -> int:
         cfg = cfg.replace(n_epochs=args.epochs)
     if args.hierarchical:
         cfg = cfg.replace(hierarchical=True)
+    if args.checkpoint_dir:
+        cfg = cfg.replace(checkpoint_dir=args.checkpoint_dir)
+    if args.checkpoint_every:
+        cfg = cfg.replace(checkpoint_every_epochs=args.checkpoint_every)
 
     # ---- mesh ------------------------------------------------------------------
     if args.mesh:
@@ -90,20 +93,13 @@ def main(argv=None) -> int:
         n_shards *= d
     print(f"mesh {dims} axes {axis_names}; {n_shards} shards")
 
-    # ---- data + index (cached) ---------------------------------------------------
+    # ---- data + index (cached next to the checkpoints) ---------------------------
     x, sup, sub = hierarchical_mixture(cfg.n_points, cfg.dim, seed=cfg.seed)
-    ckdir = args.checkpoint_dir
+    ckdir = cfg.checkpoint_dir
     index = None
-    index_cache = os.path.join(ckdir, "index.npz") if ckdir else ""
+    index_cache = index_cache_path(ckdir) if ckdir else ""
     if index_cache and os.path.exists(index_cache):
-        from repro.index.ann import AnnIndex
-
-        z = np.load(index_cache)
-        index = AnnIndex(
-            x_rows=z["x_rows"], knn_idx=z["knn_idx"], knn_w=z["knn_w"],
-            counts=z["counts"], centroids=z["centroids"], perm=z["perm"],
-            capacity=int(z["capacity"]), n_points=int(z["n_points"]),
-        )
+        index = load_index(index_cache)
         print("index: restored from cache")
     if index is None:
         t0 = time.time()
@@ -111,65 +107,37 @@ def main(argv=None) -> int:
         print(f"index: built in {time.time() - t0:.1f}s")
         if index_cache:
             os.makedirs(ckdir, exist_ok=True)
-            np.savez(
-                index_cache, x_rows=index.x_rows, knn_idx=index.knn_idx,
-                knn_w=index.knn_w, counts=index.counts, centroids=index.centroids,
-                perm=index.perm, capacity=index.capacity, n_points=index.n_points,
+            save_index(index, index_cache)
+
+    resume = bool(args.resume and ckdir and latest_step(ckdir) is not None)
+    if resume:
+        meta = load_metadata(ckdir)
+        print(f"resume: epoch {int(meta['epoch']) + 1} (ckpt step {meta['epoch']})")
+
+    class Progress(FitCallbacks):
+        wants_embedding = False
+
+        def on_epoch_start(self, ev):
+            if ev.epoch == args.fail_at_epoch:
+                print(f"CRASH INJECTION at epoch {ev.epoch}", flush=True)
+                os._exit(17)
+
+        def on_epoch_end(self, ev):
+            print(
+                f"epoch {ev.epoch:4d} loss {ev.loss:.5f} ({ev.time_s:.2f}s)",
+                flush=True,
             )
 
-    idx = shard_index_arrays(index, n_shards)
-    theta_np = np.asarray(NomadProjection(cfg)._init_theta(x, index))
-    start_epoch = 0
+        def on_checkpoint(self, ev):
+            print(f"checkpoint: epoch {ev.epoch} → {ev.directory}", flush=True)
 
-    ckpt = None
-    if ckdir:
-        ckpt = Checkpointer(ckdir, n_shards=n_shards, keep=3, async_save=True)
-        if args.resume and latest_step(ckdir) is not None:
-            tree, meta = ckpt.restore({"theta": theta_np})
-            theta_np = tree["theta"]
-            start_epoch = int(meta["epoch"]) + 1
-            print(f"resume: epoch {start_epoch} (ckpt step {meta['epoch']})")
-
-    axes = ((pod_axis,) if pod_axis else ()) + shard_axes
-    row_sh = NamedSharding(mesh, P(axes, None))
-    vec_sh = NamedSharding(mesh, P(axes))
-    theta = jax.device_put(jnp.asarray(theta_np), row_sh)
-    idx = {
-        "knn_idx": jax.device_put(idx["knn_idx"], row_sh),
-        "knn_w": jax.device_put(idx["knn_w"], row_sh),
-        "counts": jax.device_put(idx["counts"], vec_sh),
-        "cum_counts": jax.device_put(idx["cum_counts"], vec_sh),
-    }
-    counts_global = jnp.asarray(index.counts, jnp.float32)
-
-    steps = max(1, -(-cfg.resolved_steps_per_epoch() // n_shards))
-    epoch_fn = jax.jit(
-        make_sharded_epoch_fn(
-            cfg, mesh, shard_axes=shard_axes, pod_axis=pod_axis,
-            steps_per_epoch=steps, n_shards=n_shards,
-        )
+    strategy = "hierarchical" if (cfg.hierarchical and pod_axis) else "sharded"
+    proj = NomadProjection(
+        cfg, strategy=strategy, mesh=mesh, shard_axes=shard_axes, pod_axis=pod_axis
     )
-    lr0 = cfg.resolved_lr0()
-    key = jax.random.key(cfg.seed + 1)
-    every = args.checkpoint_every or cfg.checkpoint_every_epochs
+    res = proj.fit(x, index=index, callbacks=Progress(), resume=resume)
 
-    for e in range(start_epoch, cfg.n_epochs):
-        if e == args.fail_at_epoch:
-            print(f"CRASH INJECTION at epoch {e}", flush=True)
-            os._exit(17)
-        t0 = time.time()
-        f0 = 1.0 - e / cfg.n_epochs
-        f1 = 1.0 - (e + 1) / cfg.n_epochs
-        theta, ml = epoch_fn(
-            theta, idx, counts_global, lr0 * f0, lr0 * f1, jax.random.fold_in(key, e)
-        )
-        print(f"epoch {e:4d} loss {float(ml):.5f} ({time.time() - t0:.2f}s)", flush=True)
-        if ckpt and ((e + 1) % every == 0 or e == cfg.n_epochs - 1):
-            ckpt.save(e, {"theta": np.asarray(theta)}, sharded_keys=("theta",), metadata={"epoch": e})
-    if ckpt:
-        ckpt.wait()
-
-    emb = index.unpermute(np.asarray(theta))
+    emb = res.embedding
     if args.out:
         np.save(args.out, emb)
         print("embedding →", args.out)

@@ -92,10 +92,13 @@ def test_resolve_backend_policy_on_cpu(monkeypatch):
 
 def test_config_threads_impl():
     assert NomadConfig().resolved_kernel_impl() == "auto"
-    assert NomadConfig(use_pallas=False).resolved_kernel_impl() == "jnp"
     assert NomadConfig(kernel_impl="pallas").resolved_kernel_impl() == "pallas"
+    # the legacy bool still resolves, but is deprecated
+    with pytest.warns(DeprecationWarning, match="use_pallas"):
+        assert NomadConfig(use_pallas=False).resolved_kernel_impl() == "jnp"
     # kernel_impl supersedes the legacy bool
-    assert NomadConfig(use_pallas=True, kernel_impl="jnp").resolved_kernel_impl() == "jnp"
+    with pytest.warns(DeprecationWarning, match="use_pallas"):
+        assert NomadConfig(use_pallas=True, kernel_impl="jnp").resolved_kernel_impl() == "jnp"
 
 
 def test_dispatch_unknown_kernel_raises():

@@ -21,7 +21,6 @@ CFG = NomadConfig(
     n_exact_negatives=8,
     batch_size=512,
     n_epochs=25,
-    use_pallas=False,
 )
 
 
