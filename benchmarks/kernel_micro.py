@@ -45,10 +45,11 @@ def run(quick: bool = False):
         spec = registry.get(name)
         args = spec.make_inputs(jax.random.key(0), spec.bench_shapes)
         label = _shape_label(spec.bench_shapes)
-        tiles = spec.tiles_for_backend(registry.backend())
-        mode = "interpret" if registry.interpret_default() else "compiled"
-        pallas_fn = lambda *a: spec.pallas(*a, tiles=tiles, interpret=registry.interpret_default())
-        rows.append((f"kernel/{name}_{label}", _time(pallas_fn, *args), mode))
+        if spec.pallas is not None:
+            tiles = spec.tiles_for_backend(registry.backend())
+            mode = "interpret" if registry.interpret_default() else "compiled"
+            pallas_fn = lambda *a: spec.pallas(*a, tiles=tiles, interpret=registry.interpret_default())
+            rows.append((f"kernel/{name}_{label}", _time(pallas_fn, *args), mode))
         rows.append((f"kernel/{name}_ref", _time(jax.jit(spec.ref), *args), "oracle"))
     return rows
 

@@ -20,6 +20,7 @@ SUITES = {
     "fig4": "benchmarks.fig4_multiscale",  # paper Figures 1 & 4
     "roofline": "benchmarks.roofline_table",  # assignment §Roofline
     "kernels": "benchmarks.kernel_micro",  # Pallas kernels
+    "index_build": "benchmarks.index_build",  # §3.2 device build vs seed host
 }
 
 

@@ -268,6 +268,15 @@ class NomadConfig:
     capacity_slack: float = 1.25  # cluster capacity = slack * N / K (TPU static shapes)
     n_neighbors: int = 15  # k of the kNN graph
 
+    # index-build execution (repro.index.build.IndexBuilder): where the §3.2
+    # pipeline itself runs. "auto" resolves from jax.devices() like the
+    # training strategy; "local" is one device; "sharded" never places the
+    # full (N, D) on a single device.
+    build_strategy: str = "auto"  # "auto" | "local" | "sharded"
+    build_block_rows: int = 16384  # row block of the E-step / capacity bidding
+    build_max_rounds: int = 16  # device bidding rounds before host fallback
+    build_candidates: int = 32  # nearest-centroid candidates cached per row
+
     # loss (paper §3.3)
     n_noise: int = 64  # |M| noise samples per head
     n_exact_negatives: int = 16  # samples drawn from non-approximated cells
@@ -306,6 +315,20 @@ class NomadConfig:
             raise ValueError(
                 f"unknown strategy {self.strategy!r} "
                 "(want 'auto'|'local'|'sharded'|'hierarchical')"
+            )
+        if self.build_strategy not in ("auto", "local", "sharded"):
+            raise ValueError(
+                f"unknown build_strategy {self.build_strategy!r} "
+                "(want 'auto'|'local'|'sharded')"
+            )
+        if (
+            self.build_block_rows < 1
+            or self.build_max_rounds < 1
+            or self.build_candidates < 1
+        ):
+            raise ValueError(
+                "build_block_rows, build_max_rounds and build_candidates "
+                "must be >= 1"
             )
         if self.use_pallas is not None:
             warnings.warn(

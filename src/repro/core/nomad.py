@@ -193,6 +193,10 @@ class FitResult:
     n_shards: int = 1
     mesh_shape: Optional[tuple] = None
     mesh_axes: Optional[tuple] = None
+    # index-build provenance: "local" | "sharded" (IndexBuilder ran),
+    # "cache" (checkpoint_dir/index.npz reused), "provided" (index= argument)
+    index_build_strategy: str = ""
+    index_build_s: float = 0.0
     # checkpoint/resume provenance
     start_epoch: int = 0
     resumed: bool = False
@@ -216,6 +220,11 @@ class NomadProjection:
     ``jax.devices()``; ``"local"`` / ``"sharded"`` / ``"hierarchical"`` force
     a mode; an :class:`repro.core.strategy.ExecutionStrategy` instance plugs
     in a custom one. All paths return the same enriched :class:`FitResult`.
+    The ANN index is built the same way: ``cfg.build_strategy`` resolves an
+    :class:`repro.index.build.IndexBuilder` over the training mesh's device
+    pool, so the §3.2 pipeline is device-resident (and sharded) before the
+    first epoch runs; ``FitResult.index_build_strategy`` /
+    ``index_build_s`` record what happened.
 
     Progress streams through the structured event API
     (:class:`repro.core.strategy.FitCallbacks`): ``on_epoch_start``,
@@ -306,11 +315,12 @@ class NomadProjection:
             resolve_strategy,
         )
         from repro.index.ann import (
-            build_index,
+            data_fingerprint,
             index_cache_path,
             load_index,
             save_index,
         )
+        from repro.index.build import IndexBuilder
 
         cfg = self.cfg
         t0 = time.time()
@@ -323,21 +333,34 @@ class NomadProjection:
         # ---- index: argument > on-disk cache > fresh build --------------------
         index_cache = index_cache_path(ckdir) if ckdir else ""
         cache_stale = False
+        build_strategy, build_s = "provided", 0.0
         if index is None and index_cache and os.path.exists(index_cache):
             cached = load_index(index_cache)
             # a stale cache (checkpoint_dir reused across datasets) must not
-            # silently replace the data the caller passed in
-            if cached.n_points == x.shape[0] and cached.x_rows.shape[1] == x.shape[1]:
-                index = cached
-            else:
+            # silently replace the data the caller passed in — neither by
+            # shape nor, for same-shape datasets, by content (fingerprint of
+            # a deterministic row sample)
+            if cached.n_points != x.shape[0] or cached.x_rows.shape[1] != x.shape[1]:
                 cache_stale = True
                 warnings.warn(
                     f"ignoring index cache {index_cache}: built for "
                     f"({cached.n_points}, {cached.x_rows.shape[1]}) data, "
                     f"got {x.shape} — rebuilding"
                 )
+            elif cached.fingerprint and cached.fingerprint != data_fingerprint(x):
+                cache_stale = True
+                warnings.warn(
+                    f"ignoring index cache {index_cache}: same shape but "
+                    f"different data content (fingerprint mismatch) — rebuilding"
+                )
+            else:
+                index = cached
+                build_strategy = "cache"
         if index is None:
-            index = build_index(x, cfg)
+            builder = IndexBuilder(cfg, mesh=self.mesh)
+            index = builder.build(x)
+            build_strategy = builder.report.strategy
+            build_s = builder.report.total_s
         if index_cache and (cache_stale or not os.path.exists(index_cache)):
             os.makedirs(ckdir, exist_ok=True)
             save_index(index, index_cache)
@@ -455,6 +478,8 @@ class NomadProjection:
             n_shards=meta["n_shards"],
             mesh_shape=meta["mesh_shape"],
             mesh_axes=meta["mesh_axes"],
+            index_build_strategy=build_strategy,
+            index_build_s=build_s,
             start_epoch=start_epoch,
             resumed=resumed,
             checkpoint_dir=ckdir,

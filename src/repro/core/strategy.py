@@ -19,6 +19,12 @@ largest cluster-divisible device count (hierarchical when
 same global cluster-major ``theta`` view and returns per-epoch
 ``(theta, loss)``, so checkpoints written under one strategy restore under
 any other (elastic resume).
+
+The *index build* has a twin of this layer —
+:class:`repro.index.build.IndexBuilder`, resolved from
+``cfg.build_strategy`` over the same device pool — so ``fit`` is
+device-resident end to end: build strategies produce the index the
+execution strategies then train on.
 """
 
 from __future__ import annotations
@@ -350,11 +356,18 @@ class HierarchicalStrategy(ShardedStrategy):
 # ---------------------------------------------------------------------------
 
 
-def _largest_divisor_leq(k: int, n: int) -> int:
+def largest_divisor_leq(k: int, n: int) -> int:
+    """Largest divisor of ``k`` that is ≤ ``n`` — the widest device count a
+    K-cluster workload can shard over. Shared by training-strategy and
+    index-build (:func:`repro.index.build.resolve_build_strategy`)
+    resolution so ``"auto"`` picks the same device pool for both."""
     for d in range(min(k, n), 0, -1):
         if k % d == 0:
             return d
     return 1
+
+
+_largest_divisor_leq = largest_divisor_leq  # pre-PR-3 private name
 
 
 def default_mesh(cfg: NomadConfig, *, hierarchical: bool = False) -> Mesh:

@@ -1,4 +1,15 @@
-from repro.index.ann import AnnIndex, build_index
-from repro.index.kmeans import kmeans_fit, lsh_init_centroids
+from repro.index.ann import AnnIndex, build_index, data_fingerprint
+from repro.index.build import BuildReport, IndexBuilder, capacity_assign_device
+from repro.index.kmeans import kmeans_centroids, kmeans_fit, lsh_init_centroids
 
-__all__ = ["AnnIndex", "build_index", "kmeans_fit", "lsh_init_centroids"]
+__all__ = [
+    "AnnIndex",
+    "BuildReport",
+    "IndexBuilder",
+    "build_index",
+    "capacity_assign_device",
+    "data_fingerprint",
+    "kmeans_centroids",
+    "kmeans_fit",
+    "lsh_init_centroids",
+]

@@ -1,4 +1,4 @@
-"""ANN index builder: the end-to-end §3.2 pipeline.
+"""ANN index: the end-to-end §3.2 pipeline's data structure + front door.
 
 Produces the *cluster-major* layout every downstream consumer shares
 (single-device reference, shard_map distributed step, checkpointing):
@@ -13,19 +13,24 @@ knn_w      (K·C, k)   p(j|i) weights (0 ⇒ edge absent)
 counts     (K,)       real points per cluster
 centroids  (K, D)
 perm       (N,)       original index → row (for un-permuting outputs)
+fingerprint           content hash of a deterministic row sample of the
+                      data the index was built from — lets a cached index
+                      refuse a *different* same-shape dataset
+
+The pipeline itself lives in :mod:`repro.index.build` (the
+:class:`~repro.index.build.IndexBuilder` execution subsystem —
+device-resident, optionally sharded); :func:`build_index` here is the
+stable one-call front door.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import NomadConfig
-from repro.index import kmeans as km
-from repro.index.knn import batched_cluster_knn
 
 
 @dataclasses.dataclass
@@ -38,6 +43,7 @@ class AnnIndex:
     perm: np.ndarray
     capacity: int
     n_points: int
+    fingerprint: str = ""
 
     @property
     def n_clusters(self) -> int:
@@ -51,6 +57,25 @@ class AnnIndex:
     def unpermute(self, rows: np.ndarray) -> np.ndarray:
         """Map row-major data (K·C, …) back to original point order (N, …)."""
         return rows[self.perm]
+
+
+def data_fingerprint(x: np.ndarray, n_sample: int = 64) -> str:
+    """Content hash of ``x``: shape + a deterministic row sample + a full
+    float64 column-sum checksum.
+
+    The row sample alone would miss a change confined to non-sampled rows;
+    the column sums make any perturbation visible unless it exactly cancels
+    per column in float64 — good enough for the checkpoint index-cache
+    staleness check at one full O(N·D) streaming pass, no O(N·D) hashing.
+    """
+    x = np.asarray(x)
+    n = x.shape[0]
+    idx = np.unique(np.linspace(0, max(n - 1, 0), min(n_sample, n)).astype(np.int64))
+    h = hashlib.sha256()
+    h.update(repr(x.shape).encode())
+    h.update(np.ascontiguousarray(x[idx], dtype=np.float32).tobytes())
+    h.update(np.ascontiguousarray(x.sum(axis=0, dtype=np.float64)).tobytes())
+    return h.hexdigest()[:16]
 
 
 def index_cache_path(checkpoint_dir: str) -> str:
@@ -72,6 +97,7 @@ def save_index(index: AnnIndex, path: str) -> None:
         perm=index.perm,
         capacity=index.capacity,
         n_points=index.n_points,
+        fingerprint=np.asarray(index.fingerprint),
     )
 
 
@@ -86,6 +112,8 @@ def load_index(path: str) -> AnnIndex:
         perm=z["perm"],
         capacity=int(z["capacity"]),
         n_points=int(z["n_points"]),
+        # caches written before fingerprints existed load as "" (never stale)
+        fingerprint=str(z["fingerprint"]) if "fingerprint" in z.files else "",
     )
 
 
@@ -97,59 +125,26 @@ def _np_dist2(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     )
 
 
-def build_index(x: np.ndarray, cfg: NomadConfig, use_pallas=None) -> AnnIndex:
+def build_index(
+    x: np.ndarray,
+    cfg: NomadConfig,
+    impl=None,
+    *,
+    strategy=None,
+    mesh=None,
+    use_pallas=None,
+) -> AnnIndex:
     """K-means (LSH init) → capacity-bounded clusters → in-cluster exact kNN.
 
-    ``use_pallas`` is a registry impl override ("auto"|"pallas"|"jnp", legacy
-    bools accepted); None defers to ``cfg.resolved_kernel_impl()``.
+    Thin front door over :class:`repro.index.build.IndexBuilder` — every
+    stage runs on device; ``strategy`` (default ``cfg.build_strategy``)
+    selects ``"auto"|"local"|"sharded"`` execution. ``impl`` is a registry
+    impl override ("auto"|"pallas"|"jnp", legacy bools accepted); None
+    defers to ``cfg.resolved_kernel_impl()``. The ``use_pallas=`` keyword
+    is a deprecated alias for ``impl``.
     """
-    if use_pallas is None:
-        use_pallas = cfg.resolved_kernel_impl()
-    n, d = x.shape
-    K, C, k = cfg.n_clusters, cfg.cluster_capacity, cfg.n_neighbors
-    if K * C < n:
-        raise ValueError(f"capacity {C}×{K} < N={n}; raise capacity_slack")
-    key = jax.random.key(cfg.seed)
+    from repro.index.build import IndexBuilder
+    from repro.index.kmeans import deprecate_use_pallas
 
-    cents, _, _ = km.kmeans_fit(
-        key, jnp.asarray(x), K, n_iters=cfg.kmeans_iters, tol=cfg.kmeans_tol, use_pallas=use_pallas
-    )
-    cents = np.asarray(cents)
-
-    assign = km.capacity_assign(_np_dist2, np.asarray(x), cents, C)
-
-    # build the cluster-major permutation
-    order = np.argsort(assign, kind="stable")
-    counts = np.bincount(assign, minlength=K).astype(np.int64)
-    starts = np.zeros(K, np.int64)
-    starts[1:] = np.cumsum(counts)[:-1]
-    perm = np.zeros(n, np.int64)  # original → row
-    x_rows = np.zeros((K * C, d), x.dtype)
-    for c in range(K):
-        members = order[starts[c] : starts[c] + counts[c]]
-        rows = c * C + np.arange(counts[c])
-        perm[members] = rows
-        x_rows[rows] = x[members]
-
-    valid = (np.arange(C)[None, :] < counts[:, None]).astype(bool)  # (K, C)
-    knn_local, knn_w = batched_cluster_knn(
-        jnp.asarray(x_rows).reshape(K, C, d), jnp.asarray(valid), k, use_pallas
-    )
-    knn_local = np.asarray(knn_local)  # (K, C, k) slot within cluster
-    knn_w = np.asarray(knn_w).reshape(K * C, k)
-    base = (np.arange(K) * C)[:, None, None]
-    knn_idx = (knn_local + base).reshape(K * C, k).astype(np.int64)
-    # dead edges (w == 0) point at self so gathers stay in-bounds & local
-    self_rows = np.arange(K * C)[:, None]
-    knn_idx = np.where(knn_w > 0, knn_idx, self_rows)
-
-    return AnnIndex(
-        x_rows=x_rows,
-        knn_idx=knn_idx,
-        knn_w=knn_w.astype(np.float32),
-        counts=counts,
-        centroids=cents,
-        perm=perm,
-        capacity=C,
-        n_points=n,
-    )
+    impl = deprecate_use_pallas(impl, use_pallas, "build_index")
+    return IndexBuilder(cfg, strategy=strategy, mesh=mesh, impl=impl).build(x)

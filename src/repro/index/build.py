@@ -1,0 +1,561 @@
+"""Device-resident, sharded index-build subsystem (paper §3.2 at scale).
+
+PR 2 made *training* device-resident and sharded; this module does the same
+for the **index build** — the LSH-init k-means → capacity-bounded clusters
+→ in-cluster exact kNN pipeline that used to run through host NumPy with an
+O(N·K) ``banned`` matrix (~40 GB at N=10M, K=4K) inside a Python bidding
+loop.
+
+:class:`IndexBuilder` mirrors the training strategy layer:
+``build_strategy="auto"|"local"|"sharded"`` resolves from ``jax.devices()``
+(or the mesh the estimator trains on), and every stage runs on device:
+
+* **kmeans**  — the ``lax.scan`` EM of :mod:`repro.index.kmeans` with
+  on-device convergence, its E-step the row-blocked ``"kmeans_assign"``
+  registry kernel (``"sharded"`` routes through ``kmeans_fit_sharded``:
+  rows sharded, one (K, D+1) psum per iteration);
+* **assign**  — capacity-bounded assignment as a jitted ``while_loop`` of
+  bidding rounds: ONE row-blocked pass through the ``"pairwise"`` registry
+  kernel caches each row's top-R nearest centroids (R =
+  ``cfg.build_candidates``), then every round is O(N·R): each unassigned
+  row bids for its nearest centroid with free capacity, and the
+  ``"capacity_admit"`` registry kernel (stable segmented rank) admits each
+  centroid's ``free`` closest bidders — exactly the host reference's round
+  semantics. Carried state is ``assign (N,) + free (K,)``; no (N, K)
+  allocation exists on host or device;
+* **permute** — the cluster-major permutation as one vectorised
+  argsort/scatter jit (the seed looped ``for c in range(K)`` on host);
+* **knn**     — ``batched_cluster_knn``; under ``"sharded"`` each device
+  computes the kNN of its own contiguous cluster blocks via ``shard_map``.
+
+``"sharded"`` never places the full (N, D) on one device, and on a
+1-device mesh it reproduces ``"local"`` bit-for-bit (asserted in
+tests/test_index_build.py). Stragglers — rows whose whole candidate list
+filled up, a fraction of a percent at normal slack — are force-placed on
+host from O(T·K) distances, T = number of stragglers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import NomadConfig
+from repro.index import kmeans as km
+from repro.index.ann import AnnIndex, _np_dist2, data_fingerprint
+from repro.index.knn import batched_cluster_knn, cluster_knn_batch_sharded
+
+BUILD_AXIS = "build"
+
+
+# ---------------------------------------------------------------------------
+# Capacity-bounded assignment: device bidding rounds over cached candidates
+# ---------------------------------------------------------------------------
+
+
+def _candidate_pass(x, cents, n_cand: int, impl: str, block: int):
+    """One row-blocked pass: each row's ``R = min(n_cand, K)`` nearest
+    centroids, distance-sorted. The (block, K) distance tile comes from the
+    ``"pairwise"`` registry kernel; only the (N, R) top-k survives — the
+    single O(N·K) *compute* pass of the whole assignment, with O(N·R)
+    *memory*."""
+    from repro.kernels import registry
+
+    n, d = x.shape
+    r = min(n_cand, cents.shape[0])
+    block = max(1, min(block, n))
+    nb = -(-n // block)
+    pad = nb * block - n
+    xp = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)]) if pad else x
+
+    def one(xb):
+        d2 = registry.dispatch("pairwise", xb, cents, impl=impl)
+        neg, idx = jax.lax.top_k(-d2, r)
+        return idx.astype(jnp.int32), -neg
+
+    idx, d2 = jax.lax.map(one, xp.reshape(nb, block, d))
+    return idx.reshape(nb * block, r)[:n], d2.reshape(nb * block, r)[:n]
+
+
+def _bid_from_candidates(cand_idx, cand_d2, free):
+    """Each row's nearest centroid with free capacity — candidates are
+    distance-sorted, so that is the first free one. Rows whose whole
+    candidate list is full (``has=False``) sit the round out (and fall to
+    the host straggler pass if the loop ends)."""
+    ok = free[cand_idx] > 0  # (N, R)
+    has = jnp.any(ok, axis=1)
+    j = jnp.argmax(ok, axis=1)  # first free candidate
+    rows = jnp.arange(cand_idx.shape[0])
+    return cand_idx[rows, j], cand_d2[rows, j], has
+
+
+def _round_cond_body(estep_fn, n: int, n_real: int, K: int, max_rounds: int):
+    """The shared bidding-round while_loop pieces (local and sharded).
+
+    Every round with a non-empty bidder pool admits at least one point
+    (``capacity_admit`` admits min(bidders, free) per centroid), so the
+    loop provably progresses; ``progressed`` stops it early once the only
+    unassigned rows are candidate-exhausted stragglers."""
+    from repro.kernels import registry
+
+    real = jnp.arange(n) < n_real
+
+    def cond(carry):
+        assign, _free, r, progressed = carry
+        return (r < max_rounds) & progressed & jnp.any((assign < 0) & real)
+
+    def body(carry):
+        assign, free, r, _progressed = carry
+        pick, d2, has = estep_fn(free)
+        bidding = (assign < 0) & real & has
+        admitted = registry.dispatch("capacity_admit", pick, d2, bidding, free)
+        assign = jnp.where(admitted, pick, assign)
+        taken = jnp.zeros_like(free).at[jnp.where(admitted, pick, K)].add(
+            1, mode="drop"
+        )
+        return assign, free - taken, r + 1, jnp.any(bidding)
+
+    init = (
+        jnp.full((n,), -1, jnp.int32),
+        None,  # free filled in by the caller
+        jnp.zeros((), jnp.int32),
+        jnp.ones((), bool),
+    )
+    return cond, body, init
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "impl", "block", "max_rounds", "n_cand")
+)
+def _capacity_rounds_local(x, cents, capacity, impl, block, max_rounds, n_cand):
+    n = x.shape[0]
+    K = cents.shape[0]
+    cand_idx, cand_d2 = _candidate_pass(x, cents, n_cand, impl, block)
+    cond, body, init = _round_cond_body(
+        lambda free: _bid_from_candidates(cand_idx, cand_d2, free),
+        n,
+        n,
+        K,
+        max_rounds,
+    )
+    init = (init[0], jnp.full((K,), capacity, jnp.int32), init[2], init[3])
+    assign, free, _, _ = jax.lax.while_loop(cond, body, init)
+    return assign, free
+
+
+def _capacity_rounds_sharded(
+    mesh, x_sharded, cents, capacity, impl, block, max_rounds, n_cand, n_real
+):
+    """Rows (and their candidate cache) sharded over the build axis; the
+    per-round exchange is one all_gather of the (N,) bids (admission is
+    replicated — O(N + K) state, never (N, K) nor (N, D) on one device)."""
+    n = x_sharded.shape[0]
+    K = cents.shape[0]
+    blk = max(1, min(block, n // mesh.shape[BUILD_AXIS]))
+
+    @jax.jit
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(BUILD_AXIS, None), P(None, None)),
+        out_specs=(P(None), P(None)),
+        check_rep=False,
+    )
+    def run(x_local, cents):
+        cand_idx, cand_d2 = _candidate_pass(x_local, cents, n_cand, impl, blk)
+
+        def estep(free):
+            p_l, d_l, h_l = _bid_from_candidates(cand_idx, cand_d2, free)
+            return (
+                jax.lax.all_gather(p_l, BUILD_AXIS, axis=0, tiled=True),
+                jax.lax.all_gather(d_l, BUILD_AXIS, axis=0, tiled=True),
+                jax.lax.all_gather(h_l, BUILD_AXIS, axis=0, tiled=True),
+            )
+
+        cond, body, init = _round_cond_body(estep, n, n_real, K, max_rounds)
+        init = (init[0], jnp.full((K,), capacity, jnp.int32), init[2], init[3])
+        assign, free, _, _ = jax.lax.while_loop(cond, body, init)
+        return assign, free
+
+    return run(x_sharded, cents)
+
+
+def _force_place_host(x, cents, assign, free, chunk: int = 8192):
+    """Place stragglers (rows unassigned after ``max_rounds``) into their
+    nearest centroid with space — O(T·K) host *compute*, chunked so the
+    live distance block never exceeds (chunk, K) even if contention drives
+    T toward N."""
+    todo = np.flatnonzero(assign < 0)
+    if todo.size == 0:
+        return assign, 0
+    for s in range(0, todo.size, chunk):
+        block = todo[s : s + chunk]
+        d2 = _np_dist2(x[block], cents)
+        for t, row in zip(block, np.argsort(d2, axis=1)):
+            for c in row:
+                if free[c] > 0:
+                    assign[t] = c
+                    free[c] -= 1
+                    break
+    if (assign < 0).any():
+        raise RuntimeError("capacity assignment: total capacity < N")
+    return assign, int(todo.size)
+
+
+def capacity_assign_device(
+    x: np.ndarray,
+    cents: np.ndarray,
+    capacity: int,
+    *,
+    impl="auto",
+    block: int = 16384,
+    max_rounds: int = 16,
+    n_cand: int = 32,
+) -> np.ndarray:
+    """Device-resident capacity-bounded assignment (single-device form).
+
+    The round semantics match :func:`repro.index.kmeans.capacity_assign`
+    (the host NumPy oracle): unassigned points bid for their nearest
+    centroid with free capacity; each centroid admits its ``free`` closest
+    bidders, ties broken by original index. (A point whose ``n_cand``
+    nearest centroids all fill is force-placed by the straggler pass —
+    the one place the two can differ, and only under extreme contention.)
+    Returns ``assign`` (N,) int64.
+    """
+    from repro.kernels import registry
+
+    resolved = registry.resolve("pairwise", impl)
+    assign, free = _capacity_rounds_local(
+        jnp.asarray(x),
+        jnp.asarray(cents, jnp.float32),
+        capacity,
+        resolved,
+        max(1, min(block, x.shape[0])),
+        max_rounds,
+        n_cand,
+    )
+    assign = np.asarray(assign).astype(np.int64)
+    assign, _ = _force_place_host(
+        np.asarray(x), np.asarray(cents), assign, np.asarray(free).copy()
+    )
+    return assign
+
+
+# ---------------------------------------------------------------------------
+# Cluster-major permutation: one argsort/scatter jit
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters", "capacity"))
+def _permutation_from_assign(assign, n_clusters, capacity):
+    """assign (N,) → (perm (N,), counts (K,)) on device.
+
+    row = cluster · capacity + slot, slots in stable original-index order —
+    identical layout to the seed's per-cluster host loop, vectorised. Only
+    O(N + K) integer state; the (K·C, D) row buffer itself is one host
+    memcpy of the (host-resident) input, done per consumer: whole for the
+    local kNN stage, shard-by-shard for the sharded one.
+    """
+    n = assign.shape[0]
+    order = jnp.argsort(assign, stable=True)
+    counts = jnp.zeros((n_clusters,), jnp.int32).at[assign].add(1)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)]
+    )
+    a_sorted = assign[order]
+    slot = jnp.arange(n, dtype=jnp.int32) - starts[a_sorted]
+    rows = a_sorted * capacity + slot
+    perm = jnp.zeros((n,), jnp.int32).at[order].set(rows)
+    return perm, counts
+
+
+def _scatter_rows_host(x, perm, n_clusters, capacity):
+    """x_rows (K·C, D) in the caller's dtype — one vectorised host scatter."""
+    x_rows = np.zeros((n_clusters * capacity, x.shape[1]), x.dtype)
+    x_rows[perm] = x
+    return x_rows
+
+
+def _finalize_knn(knn_local, knn_w, K: int, C: int):
+    """(K, C, k) in-cluster slots → (K·C, k) global rows; dead edges → self."""
+    knn_local = np.asarray(knn_local)
+    knn_w = np.asarray(knn_w).reshape(K * C, -1)
+    base = (np.arange(K) * C)[:, None, None]
+    knn_idx = (knn_local + base).reshape(K * C, -1).astype(np.int64)
+    self_rows = np.arange(K * C)[:, None]
+    knn_idx = np.where(knn_w > 0, knn_idx, self_rows)
+    return knn_idx, knn_w.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# The builder
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BuildReport:
+    """Provenance of one index build (feeds FitResult + benchmarks)."""
+
+    strategy: str
+    n_shards: int
+    total_s: float
+    stage_s: dict  # {"kmeans" | "assign" | "permute" | "knn": seconds}
+    stage_rss_mb: dict  # high-watermark host RSS at the end of each stage
+    stragglers: int = 0
+
+
+def _rss_mb() -> float:
+    try:
+        import resource
+        import sys
+
+        rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        # ru_maxrss is kilobytes on Linux, bytes on macOS
+        return rss / (1024.0 * 1024.0) if sys.platform == "darwin" else rss / 1024.0
+    except Exception:  # non-POSIX platform
+        return 0.0
+
+
+def resolve_build_strategy(
+    spec: str, cfg: NomadConfig, mesh: Optional[Mesh] = None
+):
+    """``"auto"|"local"|"sharded"`` → ("local", None) | ("sharded", Mesh).
+
+    The build mesh is one flat axis over the largest cluster-divisible
+    prefix of the available devices (the training mesh's devices when the
+    estimator passes one in, else ``jax.devices()``); ``"auto"`` picks
+    sharded exactly when that mesh is wider than one device.
+    """
+    from repro.core.strategy import largest_divisor_leq
+
+    spec = spec or "auto"
+    if spec not in ("auto", "local", "sharded"):
+        raise ValueError(
+            f"unknown build_strategy {spec!r} (want 'auto'|'local'|'sharded')"
+        )
+    if spec == "local":
+        return "local", None
+    devs = list(mesh.devices.reshape(-1)) if mesh is not None else jax.devices()
+    width = largest_divisor_leq(cfg.n_clusters, len(devs))
+    if spec == "auto" and width == 1:
+        return "local", None
+    return "sharded", Mesh(np.asarray(devs[:width]).reshape(width), (BUILD_AXIS,))
+
+
+class IndexBuilder:
+    """Builds the §3.2 :class:`AnnIndex` on device, locally or sharded.
+
+    Mirrors the training strategy layer: ``strategy`` (default
+    ``cfg.build_strategy``) is ``"auto"|"local"|"sharded"``; ``mesh`` (the
+    estimator's training mesh, if any) supplies the device pool. After
+    ``build`` the per-stage wall times and peak host RSS sit in
+    :attr:`report` (a :class:`BuildReport`).
+    """
+
+    def __init__(
+        self,
+        cfg: NomadConfig,
+        *,
+        strategy: Optional[str] = None,
+        mesh: Optional[Mesh] = None,
+        impl=None,
+    ):
+        self.cfg = cfg
+        self.spec = strategy if strategy is not None else cfg.build_strategy
+        self.mesh = mesh
+        self.impl = impl if impl is not None else cfg.resolved_kernel_impl()
+        self.report: Optional[BuildReport] = None
+
+    # -- the one build -------------------------------------------------------
+
+    def build(self, x: np.ndarray) -> AnnIndex:
+        cfg = self.cfg
+        n, d = x.shape
+        K, C = cfg.n_clusters, cfg.cluster_capacity
+        if K * C < n:
+            raise ValueError(f"capacity {C}×{K} < N={n}; raise capacity_slack")
+        name, mesh = resolve_build_strategy(self.spec, cfg, self.mesh)
+
+        stage_s: dict = {}
+        stage_rss: dict = {}
+
+        @contextmanager
+        def stage(label):
+            t0 = time.time()
+            yield
+            # accumulate: the straggler force-place re-enters "assign"
+            stage_s[label] = stage_s.get(label, 0.0) + (time.time() - t0)
+            stage_rss[label] = _rss_mb()
+
+        t0 = time.time()
+        if name == "local":
+            index, stragglers = self._build_local(x, stage)
+            n_shards = 1
+        else:
+            index, stragglers = self._build_sharded(x, mesh, stage)
+            n_shards = mesh.shape[BUILD_AXIS]
+        self.report = BuildReport(
+            strategy=name,
+            n_shards=n_shards,
+            total_s=time.time() - t0,
+            stage_s=stage_s,
+            stage_rss_mb=stage_rss,
+            stragglers=stragglers,
+        )
+        return index
+
+    # -- stages ----------------------------------------------------------------
+
+    def _assemble(self, x, cents, x_rows, perm, counts, knn_local, knn_w):
+        cfg = self.cfg
+        K, C = cfg.n_clusters, cfg.cluster_capacity
+        knn_idx, knn_w = _finalize_knn(knn_local, knn_w, K, C)
+        return AnnIndex(
+            x_rows=x_rows,
+            knn_idx=knn_idx,
+            knn_w=knn_w,
+            counts=np.asarray(counts).astype(np.int64),
+            centroids=np.asarray(cents),
+            perm=perm,
+            capacity=C,
+            n_points=x.shape[0],
+            fingerprint=data_fingerprint(x),
+        )
+
+    def _finish(self, x, cents, assign_d, free_d, stage, knn_fn):
+        """The strategy-independent tail: straggler force-place → permute →
+        kNN (``knn_fn`` is the one per-strategy piece) → assemble. One body
+        for both paths keeps sharded ≡ local by construction."""
+        cfg = self.cfg
+        n, d = x.shape
+        K, C = cfg.n_clusters, cfg.cluster_capacity
+
+        with stage("assign"):  # stragglers are assign work (times accumulate)
+            assign = np.asarray(assign_d)[:n].astype(np.int64)
+            assign, stragglers = _force_place_host(
+                x, np.asarray(cents), assign, np.asarray(free_d).copy()
+            )
+
+        with stage("permute"):
+            perm_d, counts = _permutation_from_assign(
+                jnp.asarray(assign, jnp.int32), K, C
+            )
+            perm = np.asarray(perm_d).astype(np.int64)
+            x_rows = _scatter_rows_host(x, perm, K, C)
+
+        with stage("knn"):
+            knn_local, knn_w = knn_fn(
+                np.asarray(x_rows, np.float32).reshape(K, C, d), counts
+            )
+            jax.block_until_ready(knn_w)
+
+        return (
+            self._assemble(x, cents, x_rows, perm, counts, knn_local, knn_w),
+            stragglers,
+        )
+
+    def _build_local(self, x, stage):
+        from repro.kernels import registry
+
+        cfg = self.cfg
+        n = x.shape[0]
+        K, C, k = cfg.n_clusters, cfg.cluster_capacity, cfg.n_neighbors
+        block = cfg.build_block_rows
+        key = jax.random.key(cfg.seed)
+        xd = jnp.asarray(x)
+
+        with stage("kmeans"):
+            cents = km.kmeans_centroids(
+                key,
+                xd,
+                K,
+                n_iters=cfg.kmeans_iters,
+                tol=cfg.kmeans_tol,
+                impl=self.impl,
+                block=block,
+            )
+            jax.block_until_ready(cents)
+
+        with stage("assign"):
+            assign_d, free_d = _capacity_rounds_local(
+                xd,
+                cents,
+                C,
+                registry.resolve("pairwise", self.impl),
+                max(1, min(block, n)),
+                cfg.build_max_rounds,
+                cfg.build_candidates,
+            )
+
+        def knn_fn(x_blocks_host, counts):
+            valid = jnp.arange(C)[None, :] < counts[:, None]
+            return batched_cluster_knn(
+                jnp.asarray(x_blocks_host), valid, k, self.impl
+            )
+
+        return self._finish(x, cents, assign_d, free_d, stage, knn_fn)
+
+    def _build_sharded(self, x, mesh, stage):
+        from repro.kernels import registry
+
+        cfg = self.cfg
+        n, d = x.shape
+        K, C, k = cfg.n_clusters, cfg.cluster_capacity, cfg.n_neighbors
+        block = cfg.build_block_rows
+        n_dev = mesh.shape[BUILD_AXIS]
+        key = jax.random.key(cfg.seed)
+
+        # pad rows up to the device count; padding never enters any statistic
+        n_pad = -(-n // n_dev) * n_dev
+        xp = x if n_pad == n else np.concatenate(
+            [x, np.zeros((n_pad - n, d), x.dtype)]
+        )
+        row_sh = NamedSharding(mesh, P(BUILD_AXIS, None))
+        xd = jax.device_put(jnp.asarray(xp), row_sh)
+
+        with stage("kmeans"):
+            cents = km.kmeans_fit_sharded(
+                key,
+                xd,
+                K,
+                mesh,
+                BUILD_AXIS,
+                n_iters=cfg.kmeans_iters,
+                tol=cfg.kmeans_tol,
+                impl=self.impl,
+                block=block,
+                n_real=n if n_pad != n else None,
+            )
+            jax.block_until_ready(cents)
+
+        with stage("assign"):
+            assign_d, free_d = _capacity_rounds_sharded(
+                mesh,
+                xd,
+                cents,
+                C,
+                registry.resolve("pairwise", self.impl),
+                block,
+                cfg.build_max_rounds,
+                cfg.build_candidates,
+                n,
+            )
+
+        def knn_fn(x_blocks_host, counts):
+            # device_put from host inside cluster_knn_batch_sharded moves
+            # each device only its own cluster blocks — the full (K·C, D)
+            # never lands on one device
+            return cluster_knn_batch_sharded(
+                mesh, BUILD_AXIS, x_blocks_host, counts, k, self.impl
+            )
+
+        return self._finish(x, cents, assign_d, free_d, stage, knn_fn)

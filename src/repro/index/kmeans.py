@@ -4,29 +4,56 @@ The paper: "We initialize our K-Means clustering using a locally sensitive
 hash, run expectation maximization until convergence, and compute exact
 nearest neighbors for each point within its cluster."
 
-The E-step distance+argmin dispatches through the kernel registry
-(kernel ``"kmeans_assign"``): the fused Pallas path when resolved, else
-the blocked jnp path (which doubles as the oracle).
-A ``shard_map`` variant (`kmeans_fit_sharded`) runs EM with points sharded
-across devices — per-iteration communication is one psum of (K, D+1)
-partial statistics, the classic distributed-EM factorisation.
+Every E-step (local, sharded, and the capacity-bidding rounds in
+:mod:`repro.index.build`) runs through one row-blocked helper,
+:func:`blocked_assign`, which dispatches the distance+argmin inner loop
+through the kernel registry (kernel ``"kmeans_assign"``): the fused Pallas
+path when resolved, else the jnp oracle per block. Peak live memory is one
+``(block, K)`` tile — never ``(N, K)``.
+
+EM itself is a ``lax.scan`` with **on-device convergence**: a ``done`` flag
+freezes the carry once the centroid shift drops under ``tol``, so a build
+never host-syncs a ``float(shift)`` per iteration. The ``shard_map``
+variant (:func:`kmeans_fit_sharded`) runs the same scan body with points
+sharded across devices — per-iteration communication is one psum of
+(K, D+1) partial statistics, the classic distributed-EM factorisation —
+and on a 1-device mesh it is bit-identical to the local scan.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+import warnings
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
-def lsh_init_centroids(key, x: jax.Array, n_clusters: int) -> jax.Array:
+def deprecate_use_pallas(impl, use_pallas, fn_name: str):
+    """Shared shim: ``use_pallas=`` keyword → ``impl=`` with a warning."""
+    if use_pallas is None:
+        return impl
+    warnings.warn(
+        f"{fn_name}(use_pallas=...) is deprecated; pass "
+        "impl='auto'|'pallas'|'jnp' instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    return use_pallas if impl is None else impl
+
+
+def lsh_init_centroids(
+    key, x: jax.Array, n_clusters: int, valid=None, n_valid: Optional[int] = None
+) -> jax.Array:
     """Random-hyperplane LSH buckets → bucket means as initial centroids.
 
     b = ceil(log2 K) hyperplanes give 2^b ≥ K buckets; the K most populated
     buckets seed the centroids; empty seats fall back to random points.
+    ``valid`` (N,) bool excludes padding rows from the bucket statistics and
+    ``n_valid`` bounds the random fallback draw (the sharded build pads N up
+    to the device count; padding must enter neither).
     """
     n, d = x.shape
     b = max(1, int(np.ceil(np.log2(n_clusters))))
@@ -35,13 +62,22 @@ def lsh_init_centroids(key, x: jax.Array, n_clusters: int) -> jax.Array:
     bits = (x.astype(jnp.float32) @ planes) > 0  # (n, b)
     codes = jnp.sum(bits * (2 ** jnp.arange(b, dtype=jnp.int32))[None, :], axis=1)
     n_buckets = 2**b
-    sums = jnp.zeros((n_buckets, d), jnp.float32).at[codes].add(x.astype(jnp.float32))
-    cnts = jnp.zeros((n_buckets,), jnp.float32).at[codes].add(1.0)
+    if valid is None:
+        sums = jnp.zeros((n_buckets, d), jnp.float32).at[codes].add(x.astype(jnp.float32))
+        cnts = jnp.zeros((n_buckets,), jnp.float32).at[codes].add(1.0)
+    else:
+        w = valid.astype(jnp.float32)
+        sums = jnp.zeros((n_buckets, d), jnp.float32).at[codes].add(
+            x.astype(jnp.float32) * w[:, None]
+        )
+        cnts = jnp.zeros((n_buckets,), jnp.float32).at[codes].add(w)
     order = jnp.argsort(-cnts)  # most populated first
     top = order[:n_clusters]
     cents = sums[top] / jnp.maximum(cnts[top], 1.0)[:, None]
-    # empty buckets → random data points
-    fallback = x[jax.random.randint(kf, (n_clusters,), 0, n)].astype(jnp.float32)
+    # empty buckets → random data points (never padding rows)
+    fallback = x[
+        jax.random.randint(kf, (n_clusters,), 0, n if n_valid is None else n_valid)
+    ].astype(jnp.float32)
     return jnp.where((cnts[top] > 0)[:, None], cents, fallback)
 
 
@@ -64,7 +100,32 @@ def assign_jnp(x: jax.Array, cents: jax.Array, block: int = 16384):
     return jnp.concatenate([o[0] for o in outs]), jnp.concatenate([o[1] for o in outs])
 
 
+def blocked_assign(x: jax.Array, cents: jax.Array, impl: str, block: int):
+    """Row-blocked E-step through the kernel registry.
+
+    ``impl`` must be pre-resolved ("pallas" | "jnp") so the choice is
+    static inside any enclosing trace. ``lax.map`` keeps one block live at
+    a time: peak memory is (block, K) on the jnp path, the kernel's own
+    tiles on the Pallas path — never (N, K).
+    """
+    from repro.kernels import registry
+
+    n, d = x.shape
+    block = max(1, min(block, n))
+    nb = -(-n // block)
+    pad = nb * block - n
+    xp = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)]) if pad else x
+
+    def one(xb):
+        return registry.dispatch("kmeans_assign", xb, cents, impl=impl)
+
+    a, d2 = jax.lax.map(one, xp.reshape(nb, block, d))
+    return a.reshape(-1)[:n], d2.reshape(-1)[:n]
+
+
 def _m_step(x, assign, n_clusters, old_cents):
+    """Unweighted M-step (the weighted/psum variant lives in ``_em_scan``,
+    where the padding mask and the collective seam belong)."""
     sums = jnp.zeros((n_clusters, x.shape[1]), jnp.float32).at[assign].add(
         x.astype(jnp.float32)
     )
@@ -73,80 +134,223 @@ def _m_step(x, assign, n_clusters, old_cents):
     return jnp.where((cnts > 0)[:, None], cents, old_cents), cnts
 
 
+def _em_scan(x, cents0, n_clusters, n_iters, tol, impl, block, w=None, psum_axis=None):
+    """The one EM body: scan with a ``done``-frozen carry (no host syncs).
+
+    On convergence the carry keeps the *pre-update* centroids, so the
+    carried ``(assign, cnts)`` stay consistent with the returned centroids
+    and no post-loop E-step is needed. ``psum_axis`` turns the M-step's
+    (K, D+1) statistics into psums — the distributed-EM factorisation.
+
+    Returns ``(cents, assign, cnts, done)``.
+    """
+    n = x.shape[0]
+
+    def partial_stats(a):
+        xf = x.astype(jnp.float32)
+        ww = jnp.ones((n,), jnp.float32) if w is None else w
+        sums = jnp.zeros((n_clusters, x.shape[1]), jnp.float32).at[a].add(
+            xf * ww[:, None]
+        )
+        cnts = jnp.zeros((n_clusters,), jnp.float32).at[a].add(ww)
+        return sums, cnts
+
+    def e_then_m(cents):
+        a, _ = blocked_assign(x, cents, impl, block)
+        sums, cnts = partial_stats(a)
+        if psum_axis is not None:
+            sums = jax.lax.psum(sums, psum_axis)  # the one collective
+            cnts = jax.lax.psum(cnts, psum_axis)
+        new = sums / jnp.maximum(cnts, 1.0)[:, None]
+        new = jnp.where((cnts > 0)[:, None], new, cents)
+        return a, new, cnts
+
+    def live(carry):
+        cents, _assign, _cnts, done = carry
+        a, new, cnts = e_then_m(cents)
+        shift = jnp.max(jnp.sum(jnp.square(new - cents), -1))
+        conv = shift < tol
+        # freeze centroids on convergence: (cents, a, cnts) stay consistent
+        return jnp.where(conv, cents, new), a, cnts, conv
+
+    def body(carry, _):
+        carry = jax.lax.cond(carry[3], lambda c: c, live, carry)
+        return carry, None
+
+    init = (
+        cents0,
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n_clusters,), jnp.float32),
+        jnp.zeros((), bool),
+    )
+    carry, _ = jax.lax.scan(body, init, None, length=n_iters)
+    return carry
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_clusters", "n_iters", "impl", "block")
+)
+def _kmeans_fit_jit(x, cents0, tol, n_clusters, n_iters, impl, block):
+    cents, assign, cnts, done = _em_scan(
+        x, cents0, n_clusters, n_iters, tol, impl, block
+    )
+
+    def align(args):
+        # ran out of iterations before converging: the carried assignment is
+        # one E-step stale w.r.t. the final centroids — align once
+        cents, _a, _c = args
+        a, _ = blocked_assign(x, cents, impl, block)
+        _, cnts = _m_step(x, a, n_clusters, cents)
+        return cents, a, cnts
+
+    return jax.lax.cond(
+        done, lambda args: args, align, (cents, assign, cnts)
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_clusters", "n_iters", "impl", "block")
+)
+def _kmeans_cents_jit(x, cents0, tol, n_clusters, n_iters, impl, block):
+    cents, _a, _c, _done = _em_scan(
+        x, cents0, n_clusters, n_iters, tol, impl, block
+    )
+    return cents
+
+
+def kmeans_centroids(
+    key,
+    x: jax.Array,
+    n_clusters: int,
+    n_iters: int = 25,
+    tol: float = 1e-4,
+    impl=None,
+    *,
+    block: int = 16384,
+):
+    """Centroids-only EM — the index build's kmeans stage.
+
+    Same scan body as :func:`kmeans_fit` minus the assignment outputs (the
+    build derives its assignment from the capacity-bounded bidding rounds,
+    not the unconstrained E-step), and the same body
+    :func:`kmeans_fit_sharded` runs under ``shard_map`` — which is what
+    makes a 1-device sharded build bit-identical to the local one.
+    """
+    from repro.kernels import registry
+
+    x = jnp.asarray(x)
+    cents0 = lsh_init_centroids(key, x, n_clusters)
+    return _kmeans_cents_jit(
+        x,
+        cents0,
+        jnp.float32(tol),
+        n_clusters,
+        n_iters,
+        registry.resolve("kmeans_assign", impl),
+        min(block, x.shape[0]),
+    )
+
+
 def kmeans_fit(
     key,
     x: jax.Array,
     n_clusters: int,
     n_iters: int = 25,
     tol: float = 1e-4,
-    use_pallas=False,
+    impl=None,
+    *,
+    block: int = 16384,
+    use_pallas=None,
 ):
     """Lloyd's EM from LSH init. Returns (centroids, assignments, counts).
 
-    ``use_pallas`` is a registry impl: "auto" | "pallas" | "jnp" (legacy
-    bools accepted). The jnp path keeps the row-blocked ``assign_jnp`` so
-    huge N never materialises an (N, K) matrix.
+    ``impl`` is a registry impl: "auto" | "pallas" | "jnp" (legacy bools
+    accepted; the ``use_pallas=`` keyword is a deprecated alias). The whole
+    EM loop is one jitted ``lax.scan`` with on-device convergence — no
+    per-iteration host sync — and the returned assignment is always the
+    nearest-centroid assignment of the returned centroids: on convergence
+    the loop's own final E-step already is (no recompute), otherwise one
+    alignment E-step runs inside the same jit.
     """
     from repro.kernels import registry
 
-    cents = lsh_init_centroids(key, x, n_clusters)
-
-    if registry.resolve("kmeans_assign", use_pallas) == "pallas":
-        assign_fn: Callable = lambda xx, cc: registry.dispatch(
-            "kmeans_assign", xx, cc, impl="pallas"
-        )
-    else:
-        assign_fn = assign_jnp
-
-    assign = None
-    for _ in range(n_iters):
-        assign, _ = assign_fn(x, cents)
-        new_cents, cnts = _m_step(x, assign, n_clusters, cents)
-        shift = float(jnp.max(jnp.sum(jnp.square(new_cents - cents), -1)))
-        cents = new_cents
-        if shift < tol:
-            break
-    assign, _ = assign_fn(x, cents)
-    _, cnts = _m_step(x, assign, n_clusters, cents)
-    return cents, assign, cnts
+    impl = deprecate_use_pallas(impl, use_pallas, "kmeans_fit")
+    x = jnp.asarray(x)
+    cents0 = lsh_init_centroids(key, x, n_clusters)
+    return _kmeans_fit_jit(
+        x,
+        cents0,
+        jnp.float32(tol),
+        n_clusters,
+        n_iters,
+        registry.resolve("kmeans_assign", impl),
+        min(block, x.shape[0]),
+    )
 
 
-def kmeans_fit_sharded(key, x_sharded, n_clusters, mesh, axis: str, n_iters: int = 25):
+def kmeans_fit_sharded(
+    key,
+    x_sharded,
+    n_clusters,
+    mesh,
+    axis: str,
+    n_iters: int = 25,
+    tol: float = 0.0,
+    impl=None,
+    *,
+    block: int = 16384,
+    n_real: Optional[int] = None,
+):
     """Distributed EM: X rows sharded over ``axis``; psum of (K, D+1) stats.
 
     x_sharded: global-view array already placed with rows sharded. Returns
     replicated centroids. (Per-iteration collective: K×(D+1) fp32.)
+    ``n_real`` masks trailing padding rows (rows padded so the row count
+    divides the mesh axis). ``tol=0`` keeps the historical fixed-iteration
+    behaviour; with the same ``tol``/``block``/``impl`` as
+    :func:`kmeans_fit`, a 1-device mesh reproduces the local scan
+    bit-for-bit.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
-    d = x_sharded.shape[1]
+    from repro.kernels import registry
 
-    cents0 = lsh_init_centroids(key, x_sharded, n_clusters)  # cheap, replicated
+    resolved = registry.resolve("kmeans_assign", impl)
+    n = x_sharded.shape[0]
+    valid = None if n_real is None else (jnp.arange(n) < n_real)
+    cents0 = lsh_init_centroids(
+        key, x_sharded, n_clusters, valid=valid, n_valid=n_real
+    )
+    if valid is None:
+        valid = jnp.ones((n,), jnp.float32)
+    else:
+        valid = valid.astype(jnp.float32)
+    blk = min(block, n // mesh.shape[axis])
 
+    @jax.jit
     @functools.partial(
         shard_map,
         mesh=mesh,
-        in_specs=(P(axis, None), P(None, None)),
+        in_specs=(P(axis, None), P(axis), P(None, None)),
         out_specs=P(None, None),
         check_rep=False,
     )
-    def em_iters(x_local, cents):
-        def body(cents, _):
-            a, _d = assign_jnp(x_local, cents)
-            sums = jnp.zeros((n_clusters, d), jnp.float32).at[a].add(
-                x_local.astype(jnp.float32)
-            )
-            cnts = jnp.zeros((n_clusters,), jnp.float32).at[a].add(1.0)
-            sums = jax.lax.psum(sums, axis)  # the one collective
-            cnts = jax.lax.psum(cnts, axis)
-            new = sums / jnp.maximum(cnts, 1.0)[:, None]
-            return jnp.where((cnts > 0)[:, None], new, cents), None
-
-        cents, _ = jax.lax.scan(body, cents, None, length=n_iters)
+    def em_iters(x_local, w_local, cents):
+        cents, _a, _c, _done = _em_scan(
+            x_local,
+            cents,
+            n_clusters,
+            n_iters,
+            jnp.float32(tol),
+            resolved,
+            blk,
+            w=w_local,
+            psum_axis=axis,
+        )
         return cents
 
-    return em_iters(x_sharded, cents0)
+    return em_iters(x_sharded, valid, cents0)
 
 
 def capacity_assign(
@@ -156,25 +360,32 @@ def capacity_assign(
     capacity: int,
     max_rounds: int = 12,
 ) -> np.ndarray:
-    """Capacity-bounded nearest-centroid assignment (host-side, NumPy).
+    """Capacity-bounded nearest-centroid assignment (host-side reference).
 
     TPU adaptation (DESIGN.md §2): static shapes need bounded clusters.
     Greedy rounds: each unassigned point bids for its nearest centroid with
     free capacity; each centroid admits its ``capacity`` closest bidders.
     Terminates because every round either fills a centroid or assigns all.
+
+    State is O(N + K): a rejected bidder's centroid is, by construction,
+    full from that round on (rejection only happens when bidders exceed the
+    remaining capacity), so the ``free <= 0`` mask already covers every
+    cluster the seed implementation tracked in its (N, K) ``banned``
+    matrix. The production build runs the device equivalent
+    (:func:`repro.index.build.capacity_assign_device`); this NumPy loop is
+    the oracle it is tested against and the benchmark baseline.
     """
     n = x.shape[0]
     K = cents.shape[0]
     assign = np.full(n, -1, np.int64)
     free = np.full(K, capacity, np.int64)
-    banned = np.zeros((n, K), bool)  # clusters already full when we bid
 
     for _ in range(max_rounds):
         todo = np.flatnonzero(assign < 0)
         if todo.size == 0:
             return assign
         d2 = dist2_fn(x[todo], cents)  # (T, K)
-        d2 = np.where(banned[todo] | (free[None, :] <= 0), np.inf, d2)
+        d2 = np.where(free[None, :] <= 0, np.inf, d2)
         pick = np.argmin(d2, 1)
         for c in range(K):
             if free[c] <= 0:
@@ -183,10 +394,8 @@ def capacity_assign(
             if bidders.size == 0:
                 continue
             if bidders.size > free[c]:
-                order = np.argsort(d2[pick == c, c])
+                order = np.argsort(d2[pick == c, c], kind="stable")
                 admitted = bidders[order[: free[c]]]
-                rejected = bidders[order[free[c] :]]
-                banned[rejected, c] = True
             else:
                 admitted = bidders
             assign[admitted] = c

@@ -52,21 +52,68 @@ def _cluster_knn_jit(
     return knn_idx.astype(jnp.int32), w
 
 
-def cluster_knn(x_block, valid, k: int, use_pallas=False):
+def cluster_knn(x_block, valid, k: int, impl=None, *, use_pallas=None):
     """Returns (knn_idx (C, k) in-cluster slots, weights (C, k) fp32).
 
-    ``use_pallas`` is a registry impl ("auto"|"pallas"|"jnp", legacy bools
-    accepted); it is resolved *outside* the jit so env overrides apply per
-    call, never baked into a cached trace.
+    ``impl`` is a registry impl ("auto"|"pallas"|"jnp", legacy bools
+    accepted; the ``use_pallas=`` keyword is a deprecated alias); it is
+    resolved *outside* the jit so env overrides apply per call, never baked
+    into a cached trace.
     """
+    from repro.index.kmeans import deprecate_use_pallas
     from repro.kernels import registry
 
-    return _cluster_knn_jit(x_block, valid, k, registry.resolve("pairwise", use_pallas))
+    impl = deprecate_use_pallas(impl, use_pallas, "cluster_knn")
+    return _cluster_knn_jit(x_block, valid, k, registry.resolve("pairwise", impl))
 
 
-def batched_cluster_knn(x_blocks: jax.Array, valid: jax.Array, k: int, use_pallas=False):
+def batched_cluster_knn(
+    x_blocks: jax.Array, valid: jax.Array, k: int, impl=None, *, use_pallas=None
+):
     """vmap over clusters: x_blocks (Kc, C, D), valid (Kc, C)."""
+    from repro.index.kmeans import deprecate_use_pallas
     from repro.kernels import registry
 
-    impl = registry.resolve("pairwise", use_pallas)
-    return jax.vmap(lambda xb, vb: _cluster_knn_jit(xb, vb, k, impl))(x_blocks, valid)
+    impl = deprecate_use_pallas(impl, use_pallas, "batched_cluster_knn")
+    resolved = registry.resolve("pairwise", impl)
+    return jax.vmap(lambda xb, vb: _cluster_knn_jit(xb, vb, k, resolved))(
+        x_blocks, valid
+    )
+
+
+def cluster_knn_batch_sharded(mesh, axis: str, x_blocks, counts, k: int, impl=None):
+    """``batched_cluster_knn`` with the cluster axis sharded over ``axis``.
+
+    Each device runs the kNN of its own contiguous cluster blocks — the
+    cluster-component property (§3.2) makes the stage embarrassingly
+    parallel, so the only data movement is placing ``x_blocks`` row-sharded.
+    On a 1-device mesh this is the local vmap, bit-for-bit.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.kernels import registry
+
+    resolved = registry.resolve("pairwise", impl)
+    Kc, C, _d = x_blocks.shape
+    if Kc % mesh.shape[axis]:
+        raise ValueError(
+            f"n_clusters={Kc} not divisible by the {mesh.shape[axis]}-device "
+            f"build mesh"
+        )
+    valid = jnp.arange(C)[None, :] < counts[:, None]
+    xb = jax.device_put(x_blocks, NamedSharding(mesh, P(axis, None, None)))
+    vb = jax.device_put(valid, NamedSharding(mesh, P(axis, None)))
+
+    @jax.jit
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None)),
+        out_specs=(P(axis, None, None), P(axis, None, None)),
+        check_rep=False,
+    )
+    def run(xb_l, vb_l):
+        return jax.vmap(lambda a, b: _cluster_knn_jit(a, b, k, resolved))(xb_l, vb_l)
+
+    return run(xb, vb)

@@ -11,6 +11,10 @@ and registers itself with :mod:`repro.kernels.registry`. Consumers call
 :mod:`repro.kernels.autotune` (per-backend grid sweep, on-disk cache).
 Adding a kernel = write the three files + ``registry.register(spec)`` —
 see docs/ARCHITECTURE.md for a worked example.
+
+A hot spot may also register **jnp-only** (``pallas=None``, no kernel
+body file) to claim the dispatch seam before a fused path lands — e.g.
+``capacity_admit``, the sort-bound admission step of the index build.
 """
 
 from repro.kernels import registry  # noqa: F401

@@ -1,0 +1,44 @@
+"""Registry spec for the capacity-bounded admission step (jnp-only).
+
+The index build's bidding loop dispatches ``"capacity_admit"`` by name so
+its inner loop is one uniform registry seam with ``"kmeans_assign"`` (the
+distance+argmin half of a round). Admission is sort-bound — a fused Pallas
+path would still be two device sorts — so the spec registers ``pallas=None``
+and always serves the jnp reference.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import registry
+from repro.kernels.capacity_admit.ref import capacity_admit_ref
+
+
+def _make_inputs(key, sig):
+    (ps, _pdt), (ds, _ddt), (bs, _bdt), (fs, _fdt) = sig
+    kp, kd, kb, kf = jax.random.split(key, 4)
+    K = fs[0]
+    pick = jax.random.randint(kp, ps, 0, K, "int32")
+    d2 = jax.random.uniform(kd, ds, "float32")
+    bidding = jax.random.bernoulli(kb, 0.7, bs)
+    free = jax.random.randint(kf, fs, 0, max(2, ps[0] // K), "int32")
+    return pick, d2, bidding, free
+
+
+def _sig(n, k):
+    return (((n,), "int32"), ((n,), "float32"), ((n,), "bool"), ((k,), "int32"))
+
+
+SPEC = registry.register(
+    registry.KernelSpec(
+        name="capacity_admit",
+        ref=capacity_admit_ref,
+        pallas=None,  # jnp-only: sort-bound on every backend
+        tile_candidates=(),
+        default_tiles={"": {}},
+        make_inputs=_make_inputs,
+        check_shapes=(_sig(512, 16), _sig(1000, 7)),
+        bench_shapes=_sig(100_000, 256),
+    )
+)

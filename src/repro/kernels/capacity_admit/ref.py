@@ -1,0 +1,45 @@
+"""jnp reference for one capacity-bounded bidding round's admission.
+
+Given every point's bid (nearest centroid with free capacity) this decides,
+per centroid, which bidders get in: the ``free[c]`` *closest* ones, with a
+stable original-index tie-break — exactly the host reference
+(`repro.index.kmeans.capacity_assign`) admits per round.
+
+The whole step is sort-bound (two stable argsorts + a searchsorted), so the
+jnp path IS the production path on every backend; it is registered jnp-only
+(``pallas=None``) to claim the dispatch seam for the index build.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def capacity_admit_ref(pick, d2, bidding, free):
+    """One bidding round's admission mask.
+
+    pick    (N,) int32  — each point's bid (a centroid id in [0, K))
+    d2      (N,) f32    — the bid's distance (ranks bidders per centroid)
+    bidding (N,) bool   — False ⇒ the row does not participate this round
+                          (already assigned, or a padding row)
+    free    (K,) int32  — remaining capacity per centroid
+
+    Returns ``admitted`` (N,) bool. Carries only O(N + K) state — never an
+    (N, K) matrix: admission rank within a centroid's bidder pool comes
+    from a stable two-key sort (centroid, distance, original index).
+    """
+    n = pick.shape[0]
+    k = free.shape[0]
+    # non-bidders sort into a sentinel segment k past every real centroid
+    pick_eff = jnp.where(bidding, pick, k).astype(jnp.int32)
+    d2_eff = jnp.where(bidding, d2.astype(jnp.float32), jnp.inf)
+    # stable two-pass sort == lexicographic (centroid, distance, index)
+    order = jnp.argsort(d2_eff, stable=True)
+    order = order[jnp.argsort(pick_eff[order], stable=True)]
+    p_sorted = pick_eff[order]
+    # rank of each bidder within its centroid's segment
+    seg_start = jnp.searchsorted(p_sorted, p_sorted, side="left")
+    rank = jnp.arange(n, dtype=jnp.int32) - seg_start.astype(jnp.int32)
+    free_ext = jnp.concatenate([free.astype(jnp.int32), jnp.zeros((1,), jnp.int32)])
+    admitted_sorted = bidding[order] & (rank < free_ext[p_sorted])
+    return jnp.zeros((n,), bool).at[order].set(admitted_sorted)

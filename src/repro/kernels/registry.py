@@ -45,11 +45,21 @@ ShapeSig = Tuple[Tuple[Tuple[int, ...], str], ...]
 
 @dataclasses.dataclass(frozen=True)
 class KernelSpec:
-    """Everything the dispatcher/autotuner/benchmarks need about one kernel."""
+    """Everything the dispatcher/autotuner/benchmarks need about one kernel.
+
+    ``pallas=None`` registers a **jnp-only** kernel: a hot spot that wants
+    the registry seam today (named dispatch, env/config overrides, a place
+    for tests and benchmarks to find it) before a fused implementation has
+    landed. Such kernels always resolve to the ref path; ``validate``
+    raises, and the autotuner never sees them. The capacity-bounded
+    admission step of the index build (``"capacity_admit"``) is the first:
+    sort-bound, VPU-bound either way, but its dispatch seam keeps the
+    build's inner loops uniform.
+    """
 
     name: str
     ref: Callable[..., Any]
-    pallas: Callable[..., Any]  # pallas(*args, tiles=Mapping, interpret=bool)
+    pallas: Optional[Callable[..., Any]]  # pallas(*args, tiles=Mapping, interpret=bool)
     tile_candidates: Tuple[Mapping[str, int], ...]
     default_tiles: Mapping[str, Mapping[str, int]]  # backend → tiles ("" = fallback)
     make_inputs: Callable[[jax.Array, ShapeSig], tuple]  # (key, sig) → args
@@ -81,6 +91,7 @@ def _load_builtins() -> None:
     if _BUILTINS_LOADED:
         return
     _BUILTINS_LOADED = True
+    import repro.kernels.capacity_admit.ops  # noqa: F401
     import repro.kernels.cauchy_mean.ops  # noqa: F401
     import repro.kernels.kmeans_assign.ops  # noqa: F401
     import repro.kernels.pairwise.ops  # noqa: F401
@@ -134,9 +145,21 @@ def interpret_default() -> bool:
     return backend() == "cpu"
 
 
+def has_pallas(name: str) -> bool:
+    """False for jnp-only kernels (registered with ``pallas=None``)."""
+    return get(name).pallas is not None
+
+
 def resolve(name: str, impl=None) -> str:
-    """Resolve one kernel's implementation to "pallas" or "jnp"."""
+    """Resolve one kernel's implementation to "pallas" or "jnp".
+
+    jnp-only kernels resolve to "jnp" under every override — the seam is
+    registered, the fused path hasn't landed yet. Invalid ``impl`` strings
+    still raise for them, same as for every other kernel.
+    """
     choice = normalize_impl(impl)
+    if not has_pallas(name):
+        return "jnp"
     if choice == "auto":
         env_kernel = os.environ.get("REPRO_KERNEL_" + name.upper().replace("-", "_"))
         env_global = os.environ.get("REPRO_KERNELS")
@@ -190,6 +213,11 @@ def validate(
     import numpy as np
 
     spec = get(name)
+    if spec.pallas is None:
+        raise ValueError(
+            f"kernel {name!r} is jnp-only (pallas=None) — nothing to validate "
+            "against the oracle"
+        )
     if tiles is None:
         tiles = spec.tiles_for_backend(backend())
     if interpret is None:

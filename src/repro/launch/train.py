@@ -64,7 +64,6 @@ def main(argv=None) -> int:
     from repro.core.nomad import NomadProjection
     from repro.core.strategy import FitCallbacks
     from repro.data.synthetic import hierarchical_mixture
-    from repro.index.ann import build_index, index_cache_path, load_index, save_index
     from repro.launch.mesh import make_mesh
 
     cfg = get_nomad(args.workload)
@@ -93,21 +92,11 @@ def main(argv=None) -> int:
         n_shards *= d
     print(f"mesh {dims} axes {axis_names}; {n_shards} shards")
 
-    # ---- data + index (cached next to the checkpoints) ---------------------------
+    # ---- data ------------------------------------------------------------------
+    # the index is owned by fit: argument > fingerprint-checked
+    # checkpoint_dir/index.npz cache > IndexBuilder on the training mesh
     x, sup, sub = hierarchical_mixture(cfg.n_points, cfg.dim, seed=cfg.seed)
     ckdir = cfg.checkpoint_dir
-    index = None
-    index_cache = index_cache_path(ckdir) if ckdir else ""
-    if index_cache and os.path.exists(index_cache):
-        index = load_index(index_cache)
-        print("index: restored from cache")
-    if index is None:
-        t0 = time.time()
-        index = build_index(x, cfg)
-        print(f"index: built in {time.time() - t0:.1f}s")
-        if index_cache:
-            os.makedirs(ckdir, exist_ok=True)
-            save_index(index, index_cache)
 
     resume = bool(args.resume and ckdir and latest_step(ckdir) is not None)
     if resume:
@@ -135,7 +124,11 @@ def main(argv=None) -> int:
     proj = NomadProjection(
         cfg, strategy=strategy, mesh=mesh, shard_axes=shard_axes, pod_axis=pod_axis
     )
-    res = proj.fit(x, index=index, callbacks=Progress(), resume=resume)
+    res = proj.fit(x, callbacks=Progress(), resume=resume)
+    print(
+        f"index: {res.index_build_strategy}"
+        + (f" build in {res.index_build_s:.1f}s" if res.index_build_s else "")
+    )
 
     emb = res.embedding
     if args.out:

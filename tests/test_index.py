@@ -89,7 +89,7 @@ def test_cluster_knn_respects_padding():
 def test_build_index_layout_and_component_property():
     cfg = NomadConfig(n_points=1500, dim=12, n_clusters=6, n_neighbors=5)
     x, _ = gaussian_mixture(1500, 12, n_components=6, seed=5)
-    idx = build_index(x, cfg, use_pallas=False)
+    idx = build_index(x, cfg, impl="jnp")
     K, C = idx.n_clusters, idx.capacity
     # permutation is a bijection onto valid rows
     assert idx.perm.shape == (1500,)

@@ -1,0 +1,249 @@
+"""Device-resident index-build subsystem (repro.index.build).
+
+Covers the PR-3 acceptance criteria: device-vs-host capacity-assignment
+equivalence, capacity edge cases (zero slack, stragglers), sharded-vs-local
+bit-equality on a 1-device mesh, build-strategy resolution, FitResult build
+provenance, and the index-cache content fingerprint.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import NomadConfig
+from repro.data.synthetic import gaussian_mixture
+from repro.index.ann import (
+    _np_dist2,
+    build_index,
+    data_fingerprint,
+    load_index,
+    save_index,
+)
+from repro.index.build import (
+    BuildReport,
+    IndexBuilder,
+    capacity_assign_device,
+    resolve_build_strategy,
+)
+from repro.index.kmeans import capacity_assign, kmeans_fit
+from repro.index.knn import batched_cluster_knn, cluster_knn
+
+CFG = NomadConfig(n_points=1500, dim=12, n_clusters=6, n_neighbors=5)
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, _ = gaussian_mixture(1500, 12, n_components=6, seed=5)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Capacity-bounded assignment: device vs host, edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_device_assign_matches_host_reference_fixed_seed():
+    rng = np.random.default_rng(7)
+    x = rng.normal(0, 1, (400, 8)).astype(np.float32)
+    cents = rng.normal(0, 1, (7, 8)).astype(np.float32)
+    cap = int(np.ceil(1.2 * 400 / 7))
+    a_host = capacity_assign(_np_dist2, x, cents, cap)
+    a_dev = capacity_assign_device(x, cents, cap, impl="jnp")
+    # same round semantics; fp tie-breaks may differ between numpy and XLA
+    assert float(np.mean(a_host == a_dev)) >= 0.99
+    counts = np.bincount(a_dev, minlength=7)
+    assert (counts <= cap).all() and counts.sum() == 400
+
+
+def test_device_assign_zero_slack_exact_fill():
+    """K·C == N: no slack at all — every cluster must fill exactly."""
+    rng = np.random.default_rng(3)
+    n, K = 96, 8
+    cap = n // K  # 12, zero slack
+    x = rng.normal(0, 1, (n, 4)).astype(np.float32)
+    cents = rng.normal(0, 1, (K, 4)).astype(np.float32)
+    a = capacity_assign_device(x, cents, cap, impl="jnp")
+    counts = np.bincount(a, minlength=K)
+    np.testing.assert_array_equal(counts, np.full(K, cap))
+
+
+def test_device_assign_straggler_force_placement():
+    """One centroid attracts everything: after max_rounds=1 the rejects are
+    force-placed — all assigned, capacity never violated, and the round's
+    admissions are the closest bidders."""
+    rng = np.random.default_rng(0)
+    n, K, cap = 50, 5, 13
+    x = rng.normal(0, 0.1, (n, 3)).astype(np.float32)
+    cents = np.full((K, 3), 50.0, np.float32)
+    cents[0] = 0.0  # everyone's nearest
+    a = capacity_assign_device(x, cents, cap, impl="jnp", max_rounds=1)
+    counts = np.bincount(a, minlength=K)
+    assert (a >= 0).all() and (counts <= cap).all() and counts.sum() == n
+    # the 13 admitted to centroid 0 are the 13 closest points to it
+    d0 = np.sum((x - cents[0]) ** 2, -1)
+    want = set(np.argsort(d0)[:cap].tolist())
+    assert set(np.flatnonzero(a == 0).tolist()) == want
+
+
+def test_device_assign_prefers_nearest_when_room():
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 1, (60, 3)).astype(np.float32)
+    cents = rng.normal(0, 1, (10, 3)).astype(np.float32)
+    a = capacity_assign_device(x, cents, capacity=60, impl="jnp")
+    np.testing.assert_array_equal(a, _np_dist2(x, cents).argmin(1))
+
+
+# ---------------------------------------------------------------------------
+# Builder: resolution, local build, sharded ≡ local on a 1-device mesh
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_build_strategy():
+    name, mesh = resolve_build_strategy("local", CFG)
+    assert name == "local" and mesh is None
+    # the in-process test runner has one device → auto resolves local
+    assert resolve_build_strategy("auto", CFG)[0] == "local"
+    name, mesh = resolve_build_strategy("sharded", CFG)
+    assert name == "sharded" and mesh.shape == {"build": 1}
+    with pytest.raises(ValueError, match="build_strategy"):
+        resolve_build_strategy("pmap", CFG)
+    with pytest.raises(ValueError, match="build_strategy"):
+        NomadConfig(build_strategy="pmap")
+
+
+def test_local_build_report_stages(data):
+    b = IndexBuilder(CFG, impl="jnp")
+    idx = b.build(data)
+    assert isinstance(b.report, BuildReport)
+    assert b.report.strategy == "local" and b.report.n_shards == 1
+    assert set(b.report.stage_s) == {"kmeans", "assign", "permute", "knn"}
+    assert all(t >= 0 for t in b.report.stage_s.values())
+    assert b.report.total_s >= sum(b.report.stage_s.values()) * 0.5
+    assert idx.fingerprint == data_fingerprint(data)
+
+
+def test_sharded_build_matches_local_bitwise_on_one_device_mesh(data):
+    loc = IndexBuilder(CFG, strategy="local", impl="jnp").build(data)
+    b = IndexBuilder(CFG, strategy="sharded", impl="jnp")
+    sh = b.build(data)
+    assert b.report.strategy == "sharded" and b.report.n_shards == 1
+    for f in ("x_rows", "knn_idx", "knn_w", "counts", "centroids", "perm"):
+        np.testing.assert_array_equal(
+            getattr(loc, f), getattr(sh, f), err_msg=f
+        )
+
+
+def test_build_index_front_door_strategy_override(data):
+    idx = build_index(data, CFG, impl="jnp", strategy="sharded")
+    assert idx.n_points == 1500
+    # perm is a bijection onto valid rows of the (K·C) cluster-major space
+    assert len(set(idx.perm.tolist())) == 1500
+    assert idx.valid_mask[idx.perm].all()
+
+
+# ---------------------------------------------------------------------------
+# kmeans_fit scan: returned assignment always matches returned centroids
+# ---------------------------------------------------------------------------
+
+
+def test_kmeans_fit_consistent_converged_and_not(data):
+    x = jnp.asarray(data)
+    for tol in (1e2, 0.0):  # converges in 1-2 iters / never converges
+        cents, assign, counts = kmeans_fit(
+            jax.random.key(0), x, 6, n_iters=5, tol=tol, impl="jnp"
+        )
+        d2 = _np_dist2(data, np.asarray(cents))
+        np.testing.assert_array_equal(np.asarray(assign), d2.argmin(1))
+        assert int(np.asarray(counts).sum()) == 1500
+
+
+# ---------------------------------------------------------------------------
+# fit provenance + index-cache fingerprint
+# ---------------------------------------------------------------------------
+
+FIT_CFG = NomadConfig(
+    n_points=600,
+    dim=8,
+    n_clusters=4,
+    n_neighbors=5,
+    n_noise=8,
+    n_exact_negatives=4,
+    batch_size=128,
+    n_epochs=1,
+)
+
+
+@pytest.fixture(scope="module")
+def fit_data():
+    x, _ = gaussian_mixture(600, 8, n_components=4, seed=2)
+    return x
+
+
+def test_fit_records_build_provenance(fit_data, tmp_path):
+    from repro.core.nomad import NomadProjection
+
+    cfg = FIT_CFG.replace(checkpoint_dir=str(tmp_path))
+    res = NomadProjection(cfg).fit(fit_data)
+    assert res.index_build_strategy == "local" and res.index_build_s > 0
+    # second fit hits the on-disk cache
+    res2 = NomadProjection(cfg).fit(fit_data, resume=False)
+    assert res2.index_build_strategy == "cache" and res2.index_build_s == 0.0
+    # an explicit index argument is recorded as provided
+    res3 = NomadProjection(FIT_CFG).fit(fit_data, index=res.index)
+    assert res3.index_build_strategy == "provided"
+
+
+def test_index_cache_fingerprint_rejects_same_shape_different_data(
+    fit_data, tmp_path
+):
+    from repro.core.nomad import NomadProjection
+
+    cfg = FIT_CFG.replace(checkpoint_dir=str(tmp_path))
+    NomadProjection(cfg).fit(fit_data)
+    x2, _ = gaussian_mixture(600, 8, n_components=4, seed=99)  # same shape!
+    with pytest.warns(UserWarning, match="fingerprint"):
+        res = NomadProjection(cfg).fit(x2, resume=False)
+    assert res.index_build_strategy == "local"  # rebuilt, not reused
+    assert res.index.fingerprint == data_fingerprint(x2)
+
+
+def test_save_load_roundtrips_fingerprint(data, tmp_path):
+    idx = IndexBuilder(CFG, impl="jnp").build(data)
+    path = str(tmp_path / "index.npz")
+    save_index(idx, path)
+    loaded = load_index(path)
+    assert loaded.fingerprint == idx.fingerprint != ""
+    # pre-fingerprint caches (no field in the npz) load as never-stale ""
+    np.savez(
+        str(tmp_path / "old.npz"),
+        **{
+            k: getattr(idx, k)
+            for k in (
+                "x_rows", "knn_idx", "knn_w", "counts", "centroids", "perm",
+                "capacity", "n_points",
+            )
+        },
+    )
+    old = load_index(str(tmp_path / "old.npz"))
+    assert old.fingerprint == ""
+
+
+# ---------------------------------------------------------------------------
+# use_pallas= deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_use_pallas_deprecated_on_index_entry_points(data):
+    rng = np.random.default_rng(0)
+    xb = jnp.asarray(rng.normal(0, 1, (16, 4)), jnp.float32)
+    valid = jnp.ones((16,), bool)
+    with pytest.warns(DeprecationWarning, match="build_index"):
+        build_index(data, CFG, use_pallas=False)
+    with pytest.warns(DeprecationWarning, match="kmeans_fit"):
+        kmeans_fit(jax.random.key(0), jnp.asarray(data), 6, n_iters=2, use_pallas=False)
+    with pytest.warns(DeprecationWarning, match="cluster_knn"):
+        cluster_knn(xb, valid, 3, use_pallas=False)
+    with pytest.warns(DeprecationWarning, match="batched_cluster_knn"):
+        batched_cluster_knn(xb[None], valid[None], 3, use_pallas=False)
