@@ -1,0 +1,117 @@
+"""Benchmark regression gate: diff fresh BENCH_*.json walls against a
+committed baseline and fail on >threshold regression.
+
+Walks both JSON reports for every ``"wall_s"`` leaf (wherever it sits —
+``device.stages.*.wall_s`` in BENCH_index_build.json, ``batch.*.wall_s``
+in BENCH_serve_latency.json) and compares the fresh wall against the
+baseline at the same path:
+
+  PYTHONPATH=src python benchmarks/check_regression.py \
+      --fresh BENCH_index_build.json \
+      --baseline benchmarks/baselines/index_build.json
+
+Exit 1 iff any stage regressed by more than ``--threshold`` (default 25%)
+*and* slowed down by at least ``--min-wall`` seconds in absolute terms —
+shared CI runners jitter sub-second walls by tens of percent, so a
+regression must be both relatively and absolutely significant to gate
+(pathological regressions — a host sync per row, a per-batch recompile —
+clear both bars instantly). A path present in the baseline but missing
+from the fresh report fails too (a silently dropped stage is how a gate
+goes blind). Refreshing a baseline is one command: rerun the benchmark
+with ``--json`` onto the baseline path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def wall_leaves(obj, path="") -> dict:
+    """{json-path → seconds} for every ``wall_s`` leaf in the report."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in sorted(obj.items()):
+            p = f"{path}/{k}" if path else str(k)
+            if k == "wall_s" and isinstance(v, (int, float)):
+                out[path or "/"] = float(v)
+            else:
+                out.update(wall_leaves(v, p))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(wall_leaves(v, f"{path}/{i}"))
+    return out
+
+
+def compare(fresh: dict, baseline: dict, threshold: float, min_wall: float):
+    """Returns (rows, regressions, missing) — rows for the report table."""
+    fw, bw = wall_leaves(fresh), wall_leaves(baseline)
+    rows, regressions = [], []
+    missing = sorted(set(bw) - set(fw))
+    for path in sorted(bw):
+        if path not in fw:
+            continue
+        base, cur = bw[path], fw[path]
+        ratio = cur / base if base > 0 else float("inf")
+        over = ratio > 1.0 + threshold
+        significant = (cur - base) >= min_wall
+        regressed = over and significant
+        rows.append((path, base, cur, ratio, over, regressed))
+        if regressed:
+            regressions.append(path)
+    return rows, regressions, missing
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True, help="freshly produced BENCH_*.json")
+    ap.add_argument("--baseline", required=True, help="committed baseline json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="max tolerated slowdown fraction (0.25 = +25%%)",
+    )
+    ap.add_argument(
+        "--min-wall",
+        type=float,
+        default=0.05,
+        help="minimum absolute slowdown (s) before a relative regression gates",
+    )
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    rows, regressions, missing = compare(
+        fresh, baseline, args.threshold, args.min_wall
+    )
+    print(
+        f"# {args.fresh} vs {args.baseline} "
+        f"(threshold +{args.threshold:.0%} AND ≥{args.min_wall}s absolute)"
+    )
+    print("stage,baseline_s,fresh_s,ratio,verdict")
+    for path, base, cur, ratio, over, regressed in rows:
+        verdict = "REGRESSED" if regressed else (
+            "ok (over threshold, sub-floor delta)" if over else "ok"
+        )
+        print(f"{path},{base:.4f},{cur:.4f},{ratio:.2f}x,{verdict}")
+    for path in missing:
+        print(f"{path},?,MISSING,-,-,MISSING", file=sys.stderr)
+
+    if regressions or missing:
+        print(
+            f"# FAIL: {len(regressions)} regression(s) {regressions}, "
+            f"{len(missing)} missing stage(s) {missing}",
+            file=sys.stderr,
+        )
+        return 1
+    print("# OK: no stage regressed beyond the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

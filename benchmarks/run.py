@@ -21,6 +21,7 @@ SUITES = {
     "roofline": "benchmarks.roofline_table",  # assignment §Roofline
     "kernels": "benchmarks.kernel_micro",  # Pallas kernels
     "index_build": "benchmarks.index_build",  # §3.2 device build vs seed host
+    "serve": "benchmarks.serve_latency",  # out-of-sample transform latency
 }
 
 

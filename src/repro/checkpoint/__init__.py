@@ -1,3 +1,8 @@
-from repro.checkpoint.checkpointer import Checkpointer, latest_step, load_metadata
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    latest_step,
+    load_metadata,
+    load_theta,
+)
 
-__all__ = ["Checkpointer", "latest_step", "load_metadata"]
+__all__ = ["Checkpointer", "latest_step", "load_metadata", "load_theta"]

@@ -164,6 +164,18 @@ class Checkpointer:
         return tree, manifest["metadata"]
 
 
+def load_theta(directory: str, step: Optional[int] = None):
+    """Restore just the θ row block of one checkpoint (latest by default).
+
+    Returns ``(theta (K·C, out_dim) np.float32, metadata)`` with shards
+    already concatenated to the global cluster-major buffer — the array the
+    serve path freezes. No estimator or config is needed; the global shape
+    comes from the manifest.
+    """
+    tree, meta = Checkpointer(directory).restore({"theta": None}, step)
+    return np.asarray(tree["theta"], np.float32), meta
+
+
 def load_metadata(directory: str, step: Optional[int] = None) -> dict:
     """User metadata of one checkpoint (latest by default) — no array I/O."""
     steps = [

@@ -296,6 +296,20 @@ class NomadConfig:
     hierarchical: bool = False  # pod-level super-means across the slow axis
     n_cluster_groups: int = 0  # super-mean groups (0 => one per pod shard)
 
+    # out-of-sample serving (repro.serve): place unseen points on a frozen
+    # map. "auto" serves sharded exactly when >1 device is visible; queries
+    # are processed in fixed `serve_microbatch` slices (one compile each),
+    # each optimised by `transform_steps` frozen NOMAD steps. transform_lr=0
+    # derives the per-row lr of the *final* fit epoch
+    # (resolved_lr0() / batch_size / n_epochs): a served map sits at the
+    # equilibrium of the annealed schedule, and re-injecting epoch-0-scale
+    # forces provably pushes queries off the frozen map.
+    serve_strategy: str = "auto"  # "auto" | "local" | "sharded"
+    serve_microbatch: int = 1024  # queries per device per jitted batch
+    serve_knn_block: int = 256  # query rows per frozen-kNN gather tile
+    transform_steps: int = 24  # frozen NOMAD steps per query batch
+    transform_lr: float = 0.0  # 0 => resolved_lr0() / batch_size / n_epochs
+
     # kernel dispatch (repro.kernels.registry): "" defers to "auto" — the
     # registry picks per backend (tpu/gpu → pallas, cpu → jnp;
     # REPRO_KERNELS / REPRO_KERNEL_<NAME> env vars override);
@@ -330,6 +344,15 @@ class NomadConfig:
                 "build_block_rows, build_max_rounds and build_candidates "
                 "must be >= 1"
             )
+        if self.serve_strategy not in ("auto", "local", "sharded"):
+            raise ValueError(
+                f"unknown serve_strategy {self.serve_strategy!r} "
+                "(want 'auto'|'local'|'sharded')"
+            )
+        if self.serve_microbatch < 1 or self.serve_knn_block < 1:
+            raise ValueError("serve_microbatch and serve_knn_block must be >= 1")
+        if self.transform_steps < 0 or self.transform_lr < 0:
+            raise ValueError("transform_steps and transform_lr must be >= 0")
         if self.use_pallas is not None:
             warnings.warn(
                 "NomadConfig.use_pallas is deprecated; use "
@@ -348,6 +371,16 @@ class NomadConfig:
         if self.use_pallas is None:
             return "auto"
         return "auto" if self.use_pallas else "jnp"
+
+    def resolved_transform_lr(self) -> float:
+        """Per-row serve lr. Fit's mean-of-batch update gives each touched
+        row an effective step of lr/batch_size, and by the last epoch the
+        linear anneal has scaled lr down by ~1/n_epochs — the regime the
+        frozen equilibrium was reached in, so that is where a new point's
+        refinement starts (the serve scan anneals it further to 0)."""
+        if self.transform_lr > 0:
+            return self.transform_lr
+        return self.resolved_lr0() / self.batch_size / max(self.n_epochs, 1)
 
     def resolved_steps_per_epoch(self) -> int:
         if self.steps_per_epoch:

@@ -207,9 +207,56 @@ class FitResult:
 def _config_digest(cfg: NomadConfig) -> dict:
     """The config fields a checkpoint must agree on to resume bit-exactly."""
     d = dataclasses.asdict(cfg)
-    for transient in ("checkpoint_dir", "checkpoint_every_epochs", "use_pallas", "kernel_impl"):
+    for transient in (
+        "checkpoint_dir",
+        "checkpoint_every_epochs",
+        "use_pallas",
+        "kernel_impl",
+        # serve-side knobs never change what a fit computes
+        "serve_strategy",
+        "serve_microbatch",
+        "serve_knn_block",
+        "transform_steps",
+        "transform_lr",
+    ):
         d.pop(transient, None)
     return d
+
+
+def prepare_inputs(x, dim: Optional[int] = None, caller: str = "fit") -> np.ndarray:
+    """The one validation/dtype-coercion gate for ``fit`` AND ``transform``.
+
+    Integer and half-precision inputs are upcast to float32 (the pipeline's
+    native dtype); float64 is *rejected* rather than silently halved so the
+    precision loss stays a caller decision; NaN/Inf fail with the same
+    actionable error everywhere.
+    """
+    x = np.asarray(x)
+    if x.ndim != 2:
+        raise ValueError(
+            f"{caller}: expected a 2-D (n_points, dim) array, got shape {x.shape}"
+        )
+    if x.dtype == np.float64:
+        raise ValueError(
+            f"{caller}: x is float64 — the whole pipeline (index build, "
+            "kernels, serving) runs float32; pass x.astype(np.float32) "
+            "explicitly so the precision cut is your call, not a silent one"
+        )
+    if x.dtype != np.float32:
+        x = x.astype(np.float32)
+    if not np.isfinite(x).all():
+        n_bad = int(np.size(x) - np.isfinite(x).sum())
+        raise ValueError(
+            f"{caller}: x contains {n_bad} non-finite values (NaN/Inf) — "
+            "clean or impute before projecting; a single NaN poisons the "
+            "k-means statistics and every distance downstream"
+        )
+    if dim is not None and x.shape[1] != dim:
+        raise ValueError(
+            f"{caller}: x has dim {x.shape[1]} but the fitted map expects "
+            f"dim {dim} — queries must live in the training feature space"
+        )
+    return x
 
 
 class NomadProjection:
@@ -236,6 +283,11 @@ class NomadProjection:
     cached beside it), and a killed run continues with
     ``NomadProjection.from_checkpoint(dir).fit(x)`` — same fold_in schedule,
     so the result matches an uninterrupted run.
+
+    A fitted (or checkpoint-loaded) estimator also serves: ``transform(q)``
+    places unseen rows on the frozen map (``repro.serve``) without touching
+    a single fitted coordinate — ``from_checkpoint(dir).transform(q)``
+    needs no access to the training array at all.
     """
 
     def __init__(
@@ -255,6 +307,9 @@ class NomadProjection:
         self.shard_axes = shard_axes
         self.pod_axis = pod_axis
         self._resume_default = False
+        self._fit_result: Optional[FitResult] = None
+        self._frozen = None
+        self._server = None
 
     # -- constructors ----------------------------------------------------------
 
@@ -323,6 +378,7 @@ class NomadProjection:
         from repro.index.build import IndexBuilder
 
         cfg = self.cfg
+        x = prepare_inputs(x, caller="fit")
         t0 = time.time()
         events = as_callbacks(callbacks, callback)
         resume = self._resume_default if resume is None else resume
@@ -468,7 +524,7 @@ class NomadProjection:
 
         emb = index.unpermute(np.asarray(theta))
         meta = strategy.describe()
-        return FitResult(
+        result = FitResult(
             embedding=emb,
             index=index,
             losses=losses_,
@@ -485,10 +541,62 @@ class NomadProjection:
             checkpoint_dir=ckdir,
             checkpoint_epochs=checkpoint_epochs,
         )
+        self._fit_result = result
+        self._frozen = None  # a refit invalidates any cached frozen state
+        self._server = None
+        return result
 
     def fit_transform(self, x: np.ndarray, **kwargs) -> np.ndarray:
-        """``fit(...)`` and return just the ``(N, out_dim)`` embedding."""
+        """``fit(...)`` and return just the ``(N, out_dim)`` embedding.
+
+        Forwards through ``fit`` and therefore through the same
+        :func:`prepare_inputs` validation gate ``transform`` uses —
+        float64/NaN inputs fail with the same actionable error everywhere.
+        """
         return self.fit(x, **kwargs).embedding
+
+    # -- out-of-sample serving (repro.serve) -----------------------------------
+
+    def map_server(self, **overrides):
+        """The :class:`repro.serve.MapServer` this estimator serves from.
+
+        Frozen state comes from the last ``fit`` when one ran in this
+        process, else straight from ``cfg.checkpoint_dir`` (θ + cached
+        index — **no training data needed**, the ``from_checkpoint``
+        serving path). The config-default server is cached; passing
+        ``overrides`` (``strategy=``, ``microbatch=``, ``mesh=``,
+        ``steps=``, ``lr=``) returns a fresh *uncached* server, so a
+        one-off override can never change what ``transform()`` later does.
+        """
+        from repro.checkpoint import latest_step
+        from repro.serve import FrozenMap, MapServer
+
+        if self._server is not None and not overrides:
+            return self._server
+        if self._frozen is None:
+            if self._fit_result is not None:
+                self._frozen = FrozenMap.from_fit(self._fit_result, self.cfg)
+            elif self.cfg.checkpoint_dir and latest_step(self.cfg.checkpoint_dir) is not None:
+                self._frozen = FrozenMap.from_checkpoint(self.cfg.checkpoint_dir, self.cfg)
+            else:
+                raise RuntimeError(
+                    "transform needs a fitted map: call fit(x) first, or load "
+                    "one with NomadProjection.from_checkpoint(dir)"
+                )
+        if overrides:
+            return MapServer(self._frozen, **overrides)
+        self._server = MapServer(self._frozen)
+        return self._server
+
+    def transform(self, x: np.ndarray, *, seed: int = 0) -> np.ndarray:
+        """Place unseen rows on the frozen fitted map (out-of-sample
+        extension). Returns the ``(n_queries, out_dim)`` placements;
+        ``map_server().transform(x)`` returns the full
+        :class:`repro.serve.TransformResult` (cells, neighbor ids/distances,
+        per-batch latency). Never moves fitted positions — the serve
+        kernels' gradients stop at the query rows.
+        """
+        return self.map_server().transform(x, seed=seed).embedding
 
     def _init_theta(self, x: np.ndarray, index: "AnnIndex") -> jax.Array:
         cfg = self.cfg

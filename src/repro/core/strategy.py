@@ -370,6 +370,14 @@ def largest_divisor_leq(k: int, n: int) -> int:
 _largest_divisor_leq = largest_divisor_leq  # pre-PR-3 private name
 
 
+def flat_mesh(devs, axis: str) -> Mesh:
+    """One flat mesh axis over ``devs`` — the shape shared by the training
+    default mesh, the index-build mesh
+    (:func:`repro.index.build.resolve_build_strategy`) and the serve mesh
+    (:func:`repro.serve.server.resolve_serve_strategy`)."""
+    return Mesh(np.asarray(devs).reshape(-1), (axis,))
+
+
 def default_mesh(cfg: NomadConfig, *, hierarchical: bool = False) -> Mesh:
     """A mesh over (a prefix of) ``jax.devices()`` compatible with K clusters."""
     devs = jax.devices()
@@ -383,7 +391,7 @@ def default_mesh(cfg: NomadConfig, *, hierarchical: bool = False) -> Mesh:
             return Mesh(arr, ("pod", "data"))
         # fall through to a flat mesh when a 2-pod layout doesn't fit
     d = _largest_divisor_leq(K, len(devs))
-    return Mesh(np.asarray(devs[:d]).reshape(d), ("data",))
+    return flat_mesh(devs[:d], "data")
 
 
 def resolve_strategy(

@@ -335,7 +335,7 @@ def resolve_build_strategy(
     estimator passes one in, else ``jax.devices()``); ``"auto"`` picks
     sharded exactly when that mesh is wider than one device.
     """
-    from repro.core.strategy import largest_divisor_leq
+    from repro.core.strategy import flat_mesh, largest_divisor_leq
 
     spec = spec or "auto"
     if spec not in ("auto", "local", "sharded"):
@@ -348,7 +348,7 @@ def resolve_build_strategy(
     width = largest_divisor_leq(cfg.n_clusters, len(devs))
     if spec == "auto" and width == 1:
         return "local", None
-    return "sharded", Mesh(np.asarray(devs[:width]).reshape(width), (BUILD_AXIS,))
+    return "sharded", flat_mesh(devs[:width], BUILD_AXIS)
 
 
 class IndexBuilder:

@@ -81,6 +81,59 @@ def batched_cluster_knn(
     )
 
 
+def query_cluster_knn(
+    q: jax.Array,  # (B, D) query vectors
+    own: jax.Array,  # (B,) assigned cluster per query
+    x_blocks: jax.Array,  # (K, C, D) frozen cluster-major vectors
+    counts: jax.Array,  # (K,) real points per cluster
+    k: int,
+    *,
+    block: int = 256,
+):
+    """Query-only kNN against a *frozen* index: each query searches its own
+    assigned (padded) cluster block — the same §3.2 locality the training
+    graph uses, so a served point attaches exactly where a refit would put
+    its positives.
+
+    Runs in ``block``-row chunks via ``lax.map`` so the gathered
+    (block, C, D) tile bounds peak memory regardless of the query count.
+    Returns (slot (B, k) in-cluster slots, d2 (B, k) ascending,
+    valid (B, k) real-neighbor mask) — per-row math only, so results are
+    independent of batching/sharding.
+    """
+    B, d = q.shape
+    C = x_blocks.shape[1]
+    block = max(1, min(block, B))
+    nb = -(-B // block)
+    pad = nb * block - B
+    qp = jnp.concatenate([q, jnp.zeros((pad, d), q.dtype)]) if pad else q
+    ownp = jnp.concatenate([own, jnp.zeros((pad,), own.dtype)]) if pad else own
+    x2 = jnp.sum(jnp.square(x_blocks.astype(jnp.float32)), -1)  # (K, C)
+
+    def one(args):
+        qb, ob = args  # (block, D), (block,)
+        xb = x_blocks[ob].astype(jnp.float32)  # (block, C, D)
+        qf = qb.astype(jnp.float32)
+        d2 = (
+            jnp.sum(jnp.square(qf), -1)[:, None]
+            + x2[ob]
+            - 2.0 * jnp.einsum("bd,bcd->bc", qf, xb)
+        )
+        d2 = jnp.maximum(d2, 0.0)
+        invalid = jnp.arange(C)[None, :] >= counts[ob][:, None]
+        neg, slot = jax.lax.top_k(-(d2 + invalid * BIG), k)
+        return slot.astype(jnp.int32), -neg
+
+    slot, d2 = jax.lax.map(
+        one, (qp.reshape(nb, block, d), ownp.reshape(nb, block))
+    )
+    slot = slot.reshape(nb * block, k)[:B]
+    d2 = d2.reshape(nb * block, k)[:B]
+    valid = slot < counts[own][:, None]
+    valid &= d2 < BIG / 2  # padded-out candidates (cluster smaller than k)
+    return slot, jnp.where(valid, d2, 0.0), valid
+
+
 def cluster_knn_batch_sharded(mesh, axis: str, x_blocks, counts, k: int, impl=None):
     """``batched_cluster_knn`` with the cluster axis sharded over ``axis``.
 

@@ -22,16 +22,9 @@ from repro.kernels.cauchy_mean.cauchy_mean import (
     cauchy_mean_fwd_pallas,
 )
 from repro.kernels.cauchy_mean.ref import cauchy_weighted_sum_ref
+from repro.kernels.padding import pad_minor as _pad_minor
 
 DEFAULT_BB, DEFAULT_BK = 512, 1024
-
-
-def _pad_minor(a: jax.Array, mult: int, fill=0):
-    pad = (-a.shape[-1]) % mult
-    if pad:
-        filler = jnp.full(a.shape[:-1] + (pad,), fill, a.dtype)
-        a = jnp.concatenate([a, filler], axis=-1)
-    return a
 
 
 @functools.lru_cache(maxsize=None)

@@ -1,0 +1,111 @@
+"""Fused frozen-neighbor attraction Pallas TPU kernels (forward + backward).
+
+This is the serve path's hot spot: every transform step evaluates each
+query against its k frozen kNN positions — a (B, k) Cauchy contraction plus
+the log-denominator coupling to the repulsive mass m. Fusing the affinity,
+the logs and the reduction keeps the (B, k) intermediates in VREGs; only
+θ (d×B), the neighbor block (k·d×B), w (k×B) and m (1×B) stream in and the
+per-query loss (1×B) streams out.
+
+Layout note (same TPU adaptation as ``cauchy_mean``): everything crosses
+the kernel transposed so the large B axis is the minor (lane) axis. The
+neighbor tensor is flattened to 2-D as (k·d, B) — row s·d + dd holds
+component dd of neighbor s — because k and d are tiny static constants the
+kernel fully unrolls over.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(theta_ref, nbrs_ref, w_ref, m_ref, out_ref, *, d, k):
+    th = theta_ref[...]  # (d, bb)
+    m = m_ref[...][0, :]  # (bb,)
+    acc = jnp.zeros_like(m)
+    for s in range(k):
+        d2 = jnp.zeros_like(m)
+        for dd in range(d):
+            diff = th[dd, :] - nbrs_ref[s * d + dd, :]
+            d2 += diff * diff
+        q = 1.0 / (1.0 + d2)
+        acc += w_ref[...][s, :] * (jnp.log(q + m) + jnp.log1p(d2))
+    out_ref[0, :] = acc
+
+
+def _bwd_kernel(theta_ref, nbrs_ref, w_ref, m_ref, gbar_ref, gth_ref, gm_ref, *, d, k):
+    th = theta_ref[...]
+    m = m_ref[...][0, :]
+    gbar = gbar_ref[...][0, :]
+    gth = [jnp.zeros_like(m) for _ in range(d)]
+    gm = jnp.zeros_like(m)
+    for s in range(k):
+        diffs = []
+        d2 = jnp.zeros_like(m)
+        for dd in range(d):
+            diff = th[dd, :] - nbrs_ref[s * d + dd, :]
+            diffs.append(diff)
+            d2 += diff * diff
+        q = 1.0 / (1.0 + d2)
+        qm = q + m
+        w = w_ref[...][s, :]
+        factor = w * (q - q * q / qm)
+        for dd in range(d):
+            gth[dd] += factor * diffs[dd]
+        gm += w / qm
+    for dd in range(d):
+        gth_ref[dd, :] = 2.0 * gbar * gth[dd]
+    gm_ref[0, :] = gbar * gm
+
+
+def frozen_attract_fwd_pallas(theta_t, nbrs_t, w_t, m, *, bb=512, interpret=True):
+    """theta_t (d, B), nbrs_t (k·d, B), w_t (k, B), m (1, B) → loss (1, B)."""
+    d, B = theta_t.shape
+    k = w_t.shape[0]
+    bb = min(bb, B)
+    assert B % bb == 0, (B, bb)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, d=d, k=k),
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((d, bb), lambda i: (0, i)),
+            pl.BlockSpec((k * d, bb), lambda i: (0, i)),
+            pl.BlockSpec((k, bb), lambda i: (0, i)),
+            pl.BlockSpec((1, bb), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bb), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, B), jnp.float32),
+        interpret=interpret,
+    )(theta_t, nbrs_t, w_t, m)
+
+
+def frozen_attract_bwd_pallas(theta_t, nbrs_t, w_t, m, gbar, *, bb=512, interpret=True):
+    """Adds gbar (1, B): returns (gθ (d, B), gm (1, B))."""
+    d, B = theta_t.shape
+    k = w_t.shape[0]
+    bb = min(bb, B)
+    assert B % bb == 0, (B, bb)
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, d=d, k=k),
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((d, bb), lambda i: (0, i)),
+            pl.BlockSpec((k * d, bb), lambda i: (0, i)),
+            pl.BlockSpec((k, bb), lambda i: (0, i)),
+            pl.BlockSpec((1, bb), lambda i: (0, i)),
+            pl.BlockSpec((1, bb), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d, bb), lambda i: (0, i)),
+            pl.BlockSpec((1, bb), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, B), jnp.float32),
+            jax.ShapeDtypeStruct((1, B), jnp.float32),
+        ],
+        interpret=interpret,
+    )(theta_t, nbrs_t, w_t, m, gbar)

@@ -1,0 +1,131 @@
+"""Public op + registry spec: ``frozen_attract`` with a custom VJP.
+
+The one-sided serve update: both directions are Pallas kernels, and the
+cotangents stop at (θ_q, m) — neighbor positions and edge weights are
+frozen by design, so the VJP returns nothing for them and the map can
+never be perturbed by a query. ``m`` keeps its gradient because the
+repulsive mass is itself a function of θ_q (via ``cauchy_mean``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import registry
+from repro.kernels.frozen_attract.frozen_attract import (
+    frozen_attract_bwd_pallas,
+    frozen_attract_fwd_pallas,
+)
+from repro.kernels.frozen_attract.ref import frozen_attract_ref
+from repro.kernels.padding import pad_minor as _pad_minor
+
+DEFAULT_BB = 512
+
+
+@functools.lru_cache(maxsize=None)
+def _build_op(bb_max: int, interpret: bool):
+    """One custom-vjp op per static (bb, interpret) configuration."""
+
+    def _prep(theta_q, nbrs, w, m):
+        B, d = theta_q.shape
+        k = w.shape[1]
+        bb = min(bb_max, max(B, 8))
+        th = _pad_minor(theta_q.astype(jnp.float32).T, bb)  # (d, B')
+        # (B, k, d) → (k, d, B) → (k·d, B'): row s·d + dd = component dd of nbr s
+        nb = _pad_minor(
+            jnp.transpose(nbrs.astype(jnp.float32), (1, 2, 0)).reshape(k * d, B), bb
+        )
+        wt = _pad_minor(w.astype(jnp.float32).T, bb)  # (k, B') pad w=0
+        mt = _pad_minor(m.astype(jnp.float32)[None, :], bb)  # (1, B')
+        return th, nb, wt, mt, bb, B
+
+    @jax.custom_vjp
+    def op(theta_q, nbrs, w, m):
+        loss, _ = _fwd(theta_q, nbrs, w, m)
+        return loss
+
+    def _fwd(theta_q, nbrs, w, m):
+        th, nb, wt, mt, bb, B = _prep(theta_q, nbrs, w, m)
+        s = frozen_attract_fwd_pallas(th, nb, wt, mt, bb=bb, interpret=interpret)
+        return s[0, :B], (theta_q, nbrs, w, m)
+
+    def _bwd(res, gbar):
+        theta_q, nbrs, w, m = res
+        th, nb, wt, mt, bb, B = _prep(theta_q, nbrs, w, m)
+        gb = _pad_minor(gbar.astype(jnp.float32)[None, :], bb)
+        gth, gm = frozen_attract_bwd_pallas(
+            th, nb, wt, mt, gb, bb=bb, interpret=interpret
+        )
+        g_theta = gth[:, :B].T.astype(theta_q.dtype)  # (B, d)
+        g_m = gm[0, :B].astype(m.dtype)
+        return (g_theta, None, None, g_m)
+
+    op.defvjp(_fwd, _bwd)
+    return op
+
+
+def frozen_attract(
+    theta_q,
+    nbrs,
+    w,
+    m,
+    *,
+    bb: int = DEFAULT_BB,
+    interpret: bool | None = None,
+):
+    """loss_b = Σ_s w[b,s]·(log(q_bs + m_b) − log q_bs) over frozen kNN.
+
+    Differentiable in ``theta_q`` and ``m`` only (custom VJP); fused over
+    (bb,) query tiles with the k·d neighbor block unrolled in-register.
+    """
+    if interpret is None:
+        interpret = registry.interpret_default()
+    return _build_op(bb, interpret)(theta_q, nbrs, w, m)
+
+
+# ---------------------------------------------------------------------------
+# Registry spec
+# ---------------------------------------------------------------------------
+
+
+def _pallas_adapter(theta_q, nbrs, w, m, *, tiles, interpret):
+    return frozen_attract(
+        theta_q, nbrs, w, m, bb=tiles.get("bb", DEFAULT_BB), interpret=interpret
+    )
+
+
+def _make_inputs(key, sig):
+    (ts, tdt), (ns, ndt), (ws, wdt), (ms, mdt) = sig
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    theta = jax.random.normal(k1, ts, tdt) * 3.0
+    nbrs = jax.random.normal(k2, ns, ndt) * 3.0
+    w = jax.random.uniform(k3, ws, wdt)
+    m = jax.random.uniform(k4, ms, mdt) * 5.0
+    return theta, nbrs, w, m
+
+
+def _sig(B, k, d, dt="float32"):
+    return (((B, d), dt), ((B, k, d), dt), ((B, k), dt), ((B,), dt))
+
+
+SPEC = registry.register(
+    registry.KernelSpec(
+        name="frozen_attract",
+        ref=frozen_attract_ref,
+        pallas=_pallas_adapter,
+        tile_candidates=({"bb": 256}, {"bb": 512}, {"bb": 1024}),
+        default_tiles={"": {"bb": DEFAULT_BB}, "tpu": {"bb": DEFAULT_BB}},
+        make_inputs=_make_inputs,
+        check_shapes=(
+            _sig(512, 15, 2),
+            _sig(64, 8, 2),
+            _sig(100, 5, 3),
+            _sig(777, 15, 2),
+        ),
+        bench_shapes=_sig(2048, 15, 2),
+        tol=(1e-5, 1e-6),
+    )
+)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the fused frozen-neighbor attraction (fwd + vjp).
+
+The serve-side loss of one query b against its *frozen* kNN:
+
+    loss_b = Σ_s w[b,s] · (log(q_bs + m_b) − log q_bs),
+    q_bs   = 1 / (1 + ‖θ_b − nb_bs‖²)
+
+— the attractive half of the NOMAD objective with the repulsive mass m_b
+(M̃ + M, already reduced) entering only through the shared denominator.
+Gradients flow to θ_b and m_b; the neighbor positions and weights are
+frozen by construction (out-of-sample extension never moves the map).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def frozen_attract_ref(theta_q, nbrs, w, m):
+    """theta_q (B, d), nbrs (B, k, d), w (B, k), m (B,) → loss (B,) fp32.
+
+    Uses log q = −log1p(‖θ−nb‖²) so q never underflows the log.
+    """
+    th = theta_q.astype(jnp.float32)
+    nb = nbrs.astype(jnp.float32)
+    d2 = jnp.sum(jnp.square(th[:, None, :] - nb), axis=-1)  # (B, k)
+    q = 1.0 / (1.0 + d2)
+    per_edge = jnp.log(q + m.astype(jnp.float32)[:, None]) + jnp.log1p(d2)
+    return jnp.sum(w.astype(jnp.float32) * per_edge, axis=-1)
+
+
+def frozen_attract_vjp_ref(theta_q, nbrs, w, m, gbar):
+    """Hand-written cotangents (the Pallas backward's oracle).
+
+    ∂loss_b/∂θ_b = 2·Σ_s w·(θ_b − nb_bs)·(q − q²/(q+m))
+    ∂loss_b/∂m_b = Σ_s w / (q_bs + m_b)
+    Returns (g_theta (B, d), g_m (B,)).
+    """
+    th = theta_q.astype(jnp.float32)
+    nb = nbrs.astype(jnp.float32)
+    diff = th[:, None, :] - nb  # (B, k, d)
+    d2 = jnp.sum(jnp.square(diff), axis=-1)
+    q = 1.0 / (1.0 + d2)
+    qm = q + m.astype(jnp.float32)[:, None]
+    wf = w.astype(jnp.float32)
+    factor = wf * (q - q * q / qm)  # (B, k)
+    g_theta = 2.0 * gbar[:, None].astype(jnp.float32) * jnp.einsum(
+        "bk,bkd->bd", factor, diff
+    )
+    g_m = gbar.astype(jnp.float32) * jnp.sum(wf / qm, axis=-1)
+    return g_theta, g_m

@@ -1,0 +1,20 @@
+"""Shared padding helpers for the transposed-layout kernels.
+
+The TPU-adapted kernels (``cauchy_mean``, ``frozen_attract``) stream their
+large axis on lanes, so public ops pad the minor axis up to the tile
+multiple before ``pallas_call`` and slice the result back.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_minor(a: jax.Array, mult: int, fill=0) -> jax.Array:
+    """Pad the last axis of ``a`` up to a multiple of ``mult`` with ``fill``."""
+    pad = (-a.shape[-1]) % mult
+    if pad:
+        filler = jnp.full(a.shape[:-1] + (pad,), fill, a.dtype)
+        a = jnp.concatenate([a, filler], axis=-1)
+    return a

@@ -93,6 +93,7 @@ def _load_builtins() -> None:
     _BUILTINS_LOADED = True
     import repro.kernels.capacity_admit.ops  # noqa: F401
     import repro.kernels.cauchy_mean.ops  # noqa: F401
+    import repro.kernels.frozen_attract.ops  # noqa: F401
     import repro.kernels.kmeans_assign.ops  # noqa: F401
     import repro.kernels.pairwise.ops  # noqa: F401
 

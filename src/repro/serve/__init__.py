@@ -1,0 +1,18 @@
+"""Out-of-sample projection & serving: ``transform()`` on a frozen map.
+
+``FrozenMap`` freezes a fitted (or checkpoint-loaded) map's device state;
+``MapServer`` batches queries against it; ``NomadProjection.transform``
+is the estimator-level front door.
+"""
+
+from repro.serve.frozen import FrozenMap
+from repro.serve.server import MapServer, TransformResult, resolve_serve_strategy
+from repro.serve.transform import make_transform_fn
+
+__all__ = [
+    "FrozenMap",
+    "MapServer",
+    "TransformResult",
+    "make_transform_fn",
+    "resolve_serve_strategy",
+]

@@ -1,0 +1,141 @@
+"""The frozen state a fitted map is served from.
+
+:class:`FrozenMap` is the device-resident bundle every transform touches:
+the fitted positions θ (cluster-major, capacity-padded — the same layout
+training used), the frozen §3.2 index geometry (cluster vectors,
+centroids, counts), the per-cell position means the repulsive M̃ term
+reads, and the row → original-id inverse permutation used to report
+neighbor ids. It is built either
+
+* from a finished fit (:meth:`from_fit` — the estimator does this
+  automatically), or
+* straight from a checkpoint directory (:meth:`from_checkpoint`): the θ
+  row block comes from the latest ``step_*/`` checkpoint and the index
+  from the ``index.npz`` cache written beside it — **no access to the raw
+  training array**, which is the production serving story: the fleet that
+  serves the map never holds the corpus that built it.
+
+Everything in a FrozenMap is immutable by convention and by construction:
+the transform path's gradients stop at the query positions (the
+``frozen_attract`` kernel's VJP returns cotangents for θ_q and the
+repulsive mass only), so serving can never perturb the map.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import NomadConfig
+
+if TYPE_CHECKING:
+    from repro.core.nomad import FitResult
+    from repro.index.ann import AnnIndex
+
+
+@dataclasses.dataclass
+class FrozenMap:
+    """Device-resident frozen state of one fitted NOMAD map."""
+
+    theta_rows: jax.Array  # (K·C, out_dim) fitted positions, cluster-major
+    x_rows: jax.Array  # (K·C, D) frozen input vectors (padding rows = 0)
+    centroids: jax.Array  # (K, D)
+    counts: jax.Array  # (K,) int32 real points per cluster
+    means: jax.Array  # (K, out_dim) per-cell position means (M̃ input)
+    inv_perm: jax.Array  # (K·C,) int32 original point id per row (-1 = pad)
+    capacity: int
+    n_points: int
+    cfg: NomadConfig
+
+    @property
+    def n_clusters(self) -> int:
+        return int(self.counts.shape[0])
+
+    @property
+    def out_dim(self) -> int:
+        return int(self.theta_rows.shape[1])
+
+    @property
+    def dim(self) -> int:
+        return int(self.x_rows.shape[1])
+
+    # -- constructors ----------------------------------------------------------
+
+    @classmethod
+    def from_index_theta(
+        cls, index: "AnnIndex", theta_rows: np.ndarray, cfg: NomadConfig
+    ) -> "FrozenMap":
+        """Freeze an (index, cluster-major θ) pair — the shared tail of both
+        public constructors, so fit-resident and checkpoint-loaded frozen
+        maps are bit-identical given the same inputs."""
+        from repro.core.nomad import local_means
+
+        K, C = index.n_clusters, index.capacity
+        counts = jnp.asarray(index.counts, jnp.int32)
+        theta = jnp.asarray(theta_rows, jnp.float32)
+        if theta.shape != (K * C, theta.shape[1]):
+            raise ValueError(
+                f"theta_rows {theta.shape} does not match the index layout "
+                f"({K} clusters × capacity {C})"
+            )
+        inv = np.full((K * C,), -1, np.int32)
+        inv[index.perm] = np.arange(index.n_points, dtype=np.int32)
+        return cls(
+            theta_rows=theta,
+            x_rows=jnp.asarray(index.x_rows, jnp.float32),
+            centroids=jnp.asarray(index.centroids, jnp.float32),
+            counts=counts,
+            means=local_means(theta, counts, C),
+            inv_perm=jnp.asarray(inv),
+            capacity=C,
+            n_points=index.n_points,
+            cfg=cfg,
+        )
+
+    @classmethod
+    def from_fit(cls, result: "FitResult", cfg: NomadConfig) -> "FrozenMap":
+        """Freeze a finished :class:`FitResult` (embedding re-permuted into
+        the cluster-major buffer; padding rows are zero, exactly as θ left
+        training — sampling never touches them)."""
+        index = result.index
+        rows = np.zeros(
+            (index.n_clusters * index.capacity, result.embedding.shape[1]),
+            np.float32,
+        )
+        rows[index.perm] = result.embedding
+        return cls.from_index_theta(index, rows, cfg)
+
+    @classmethod
+    def from_checkpoint(
+        cls, checkpoint_dir: str, cfg: Optional[NomadConfig] = None
+    ) -> "FrozenMap":
+        """Freeze the latest checkpoint of ``checkpoint_dir`` — θ from
+        ``step_*/``, geometry from the ``index.npz`` cache. Needs no
+        training data and no estimator."""
+        import os
+
+        from repro.checkpoint import load_theta
+        from repro.index.ann import index_cache_path, load_index
+
+        cache = index_cache_path(checkpoint_dir)
+        if not os.path.exists(cache):
+            raise FileNotFoundError(
+                f"no index cache at {cache} — serving from a checkpoint needs "
+                "the index.npz written by a fit with cfg.checkpoint_dir set "
+                "(or pass an AnnIndex through FrozenMap.from_index_theta)"
+            )
+        index = load_index(cache)
+        theta, meta = load_theta(checkpoint_dir)
+        if cfg is None:
+            stored = meta.get("config")
+            if stored is None:
+                raise ValueError(
+                    f"checkpoint under {checkpoint_dir} has no stored config — "
+                    "pass cfg= explicitly to serve it"
+                )
+            cfg = NomadConfig(**dict(stored))
+        return cls.from_index_theta(index, theta, cfg)

@@ -1,0 +1,162 @@
+"""MapServer: batched query serving over a frozen map.
+
+The serve twin of ``core/strategy.py``: the server owns microbatch
+queueing, padding, latency accounting and result assembly; a *serve
+strategy* owns where the jitted transform runs —
+
+* ``"local"``   — one device, one ``serve_microbatch``-row jit;
+* ``"sharded"`` — the same body under ``shard_map`` with query rows
+  sharded over a flat device mesh (frozen state replicated); each device
+  handles ``serve_microbatch`` rows per batch;
+* ``"auto"``    — sharded exactly when more than one device is visible.
+
+Because the transform is per-row math with per-row RNG, every strategy and
+every microbatch size produces bit-identical placements — a 1-device
+sharded mesh reproduces local exactly (tested), and the frozen state is
+loaded once: ``MapServer(FrozenMap.from_checkpoint(dir))`` serves with no
+access to the training array.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.serve.frozen import FrozenMap
+from repro.serve.transform import frozen_arrays, make_transform_fn
+
+SERVE_AXIS = "serve"
+
+
+@dataclasses.dataclass
+class TransformResult:
+    """What one ``MapServer.transform`` call returns (FitResult's twin)."""
+
+    embedding: np.ndarray  # (Nq, out_dim) placements, query order
+    cells: np.ndarray  # (Nq,) assigned frozen cluster per query
+    neighbor_ids: np.ndarray  # (Nq, k) original-order ids of frozen kNN (-1 = none)
+    neighbor_dists: np.ndarray  # (Nq, k) ascending high-dim distances (inf = none)
+    # serving provenance
+    n_queries: int = 0
+    strategy: str = "local"
+    n_shards: int = 1
+    microbatch: int = 0
+    steps: int = 0
+    wall_time_s: float = 0.0
+    batch_latency_s: List[float] = dataclasses.field(default_factory=list)
+    batch_loss: List[float] = dataclasses.field(default_factory=list)
+
+
+def resolve_serve_strategy(spec: str, mesh: Optional[Mesh] = None):
+    """``"auto"|"local"|"sharded"`` → ("local", None) | ("sharded", Mesh)."""
+    spec = spec or "auto"
+    if spec not in ("auto", "local", "sharded"):
+        raise ValueError(
+            f"unknown serve_strategy {spec!r} (want 'auto'|'local'|'sharded')"
+        )
+    from repro.core.strategy import flat_mesh
+
+    devs = list(mesh.devices.reshape(-1)) if mesh is not None else jax.devices()
+    if spec == "local" or (spec == "auto" and len(devs) == 1):
+        return "local", None
+    if mesh is not None and len(mesh.axis_names) == 1:
+        return "sharded", mesh
+    return "sharded", flat_mesh(devs, SERVE_AXIS)
+
+
+class MapServer:
+    """Turns a :class:`FrozenMap` into a batched query engine.
+
+    Queries are cut into fixed ``microbatch × n_shards`` slices (the last
+    one zero-padded), each placed by one jitted call — one compile total,
+    per-batch wall clocks recorded in ``TransformResult.batch_latency_s``.
+    """
+
+    def __init__(
+        self,
+        frozen: FrozenMap,
+        *,
+        strategy: Optional[str] = None,
+        microbatch: Optional[int] = None,
+        mesh: Optional[Mesh] = None,
+        steps: Optional[int] = None,
+        lr: Optional[float] = None,
+    ):
+        cfg = frozen.cfg
+        self.frozen = frozen
+        self.strategy, self.mesh = resolve_serve_strategy(
+            strategy if strategy is not None else cfg.serve_strategy, mesh
+        )
+        self.n_shards = (
+            1 if self.mesh is None else int(np.prod(list(self.mesh.shape.values())))
+        )
+        self.microbatch = microbatch or cfg.serve_microbatch
+        self.steps = cfg.transform_steps if steps is None else steps
+        self._fz = frozen_arrays(frozen)
+        self._fn = make_transform_fn(
+            frozen,
+            steps=self.steps,
+            lr=lr,
+            mesh=self.mesh,
+            # a caller-supplied 1-axis mesh keeps its own axis name
+            axis=self.mesh.axis_names[0] if self.mesh is not None else SERVE_AXIS,
+        )
+
+    @property
+    def batch_rows(self) -> int:
+        """Query rows consumed per jitted call (all shards together)."""
+        return self.microbatch * self.n_shards
+
+    def transform(self, q: np.ndarray, *, seed: int = 0) -> TransformResult:
+        """Place unseen rows on the frozen map. Deterministic per ``seed``
+        (and independent of microbatch size / sharding — RNG is folded per
+        query row)."""
+        from repro.core.nomad import prepare_inputs
+
+        q = prepare_inputs(q, dim=self.frozen.dim, caller="transform")
+        t0 = time.time()
+        nq = q.shape[0]
+        B = self.batch_rows
+        key = jax.random.key(seed)
+        embs, cells, nids, ndist = [], [], [], []
+        lat, bloss = [], []
+        for s in range(0, max(nq, 1), B):
+            qb = q[s : s + B]
+            pad = B - qb.shape[0]
+            if pad:
+                qb = np.concatenate([qb, np.zeros((pad, q.shape[1]), q.dtype)])
+            rows = np.arange(s, s + B, dtype=np.int32)
+            valid = rows < nq
+            tb = time.time()
+            th, own, ids, dist, sl = self._fn(
+                self._fz, jnp.asarray(qb), jnp.asarray(rows), jnp.asarray(valid), key
+            )
+            jax.block_until_ready(th)
+            lat.append(time.time() - tb)
+            take = B - pad
+            embs.append(np.asarray(th)[:take])
+            cells.append(np.asarray(own)[:take])
+            nids.append(np.asarray(ids)[:take])
+            ndist.append(np.asarray(dist)[:take])
+            sl = np.asarray(sl)
+            bloss.append(float(sl[-1]) if sl.size else float("nan"))
+        return TransformResult(
+            embedding=np.concatenate(embs).astype(np.float32),
+            cells=np.concatenate(cells).astype(np.int64),
+            neighbor_ids=np.concatenate(nids).astype(np.int64),
+            neighbor_dists=np.concatenate(ndist).astype(np.float32),
+            n_queries=nq,
+            strategy=self.strategy,
+            n_shards=self.n_shards,
+            microbatch=self.microbatch,
+            steps=self.steps,
+            wall_time_s=time.time() - t0,
+            batch_latency_s=lat,
+            batch_loss=bloss,
+        )

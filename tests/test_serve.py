@@ -1,0 +1,292 @@
+"""Out-of-sample serving: transform determinism, checkpoint-loaded serving,
+sharded ≡ local bit-equality, frozen-θ immutability, and the shared
+fit/transform input-validation gate.
+
+Everything runs on the single in-process CPU device; the sharded serve
+strategy is exercised on a 1-device mesh, where it must agree with the
+local strategy bit-for-bit (per-row math, per-row RNG).
+"""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs.base import NomadConfig
+from repro.core.nomad import NomadProjection, prepare_inputs
+from repro.data.synthetic import gaussian_mixture
+from repro.serve import FrozenMap, MapServer, TransformResult
+
+N, DIM, NQ = 1500, 16, 300
+
+CFG = NomadConfig(
+    n_points=N,
+    dim=DIM,
+    n_clusters=4,
+    n_neighbors=10,
+    n_noise=16,
+    n_exact_negatives=4,
+    batch_size=256,
+    n_epochs=4,
+    serve_microbatch=128,
+    transform_steps=6,
+)
+
+
+@pytest.fixture(scope="module")
+def fitted(tmp_path_factory):
+    """One fit with a checkpoint dir — shared by every serving test."""
+    ckdir = str(tmp_path_factory.mktemp("serve") / "ck")
+    x, labels = gaussian_mixture(N, DIM, n_components=4, seed=0)
+    est = NomadProjection(CFG.replace(checkpoint_dir=ckdir))
+    res = est.fit(x)
+    return est, res, x, labels, ckdir
+
+
+@pytest.fixture(scope="module")
+def queries():
+    return gaussian_mixture(NQ, DIM, n_components=4, seed=7)
+
+
+@pytest.fixture(scope="module")
+def one_device_mesh():
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("serve",))
+
+
+# ---------------------------------------------------------------------------
+# Determinism + invariances
+# ---------------------------------------------------------------------------
+
+
+def test_transform_deterministic_under_fixed_key(fitted, queries):
+    est, _, _, _, _ = fitted
+    q, _ = queries
+    a = est.transform(q, seed=0)
+    b = est.transform(q, seed=0)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (NQ, CFG.out_dim) and np.isfinite(a).all()
+    c = est.transform(q, seed=1)
+    assert not np.array_equal(a, c)  # the key matters (in-cell negatives)
+
+
+def test_transform_microbatch_invariant(fitted, queries):
+    """RNG is folded per global query row, so placements cannot depend on
+    how the queries are sliced into microbatches."""
+    est, _, _, _, _ = fitted
+    q, _ = queries
+    a = est.map_server(microbatch=64).transform(q, seed=0)
+    b = est.map_server(microbatch=256).transform(q, seed=0)
+    np.testing.assert_array_equal(a.embedding, b.embedding)
+    np.testing.assert_array_equal(a.neighbor_ids, b.neighbor_ids)
+    assert len(a.batch_latency_s) == -(-NQ // 64)
+    assert len(b.batch_latency_s) == -(-NQ // 256)
+
+
+def test_sharded_serving_equals_local_on_one_device(fitted, queries, one_device_mesh):
+    est, _, _, _, _ = fitted
+    q, _ = queries
+    loc = est.map_server(strategy="local").transform(q, seed=0)
+    sh = est.map_server(strategy="sharded", mesh=one_device_mesh).transform(q, seed=0)
+    assert loc.strategy == "local" and sh.strategy == "sharded" and sh.n_shards == 1
+    np.testing.assert_array_equal(loc.embedding, sh.embedding)
+    np.testing.assert_array_equal(loc.cells, sh.cells)
+    np.testing.assert_array_equal(loc.neighbor_ids, sh.neighbor_ids)
+    np.testing.assert_array_equal(loc.neighbor_dists, sh.neighbor_dists)
+    assert loc.batch_loss == sh.batch_loss
+
+
+def test_sharded_serving_accepts_caller_mesh_axis_name(fitted, queries):
+    """A caller-supplied 1-axis mesh keeps its own axis name (e.g. the
+    training mesh's 'data') — the serve axis must not be hard-coded."""
+    est, _, _, _, _ = fitted
+    q, _ = queries
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    sh = est.map_server(strategy="sharded", mesh=mesh).transform(q, seed=0)
+    loc = est.map_server(strategy="local").transform(q, seed=0)
+    np.testing.assert_array_equal(loc.embedding, sh.embedding)
+
+
+def test_map_server_overrides_do_not_stick(fitted, queries):
+    """A one-off map_server(override) must not change what the estimator's
+    public transform() does afterwards."""
+    est, _, _, _, _ = fitted
+    q, _ = queries
+    a = est.transform(q, seed=0)
+    est.map_server(steps=0)  # inspect-only server with overrides
+    b = est.transform(q, seed=0)
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-loaded serving (no training data)
+# ---------------------------------------------------------------------------
+
+
+def test_transform_after_from_checkpoint_matches_fit(fitted, queries):
+    """`from_checkpoint(dir).transform(q)` — no fit call, no access to the
+    training array — must equal transform on the just-fitted estimator
+    bit-for-bit."""
+    est, _, _, _, ckdir = fitted
+    q, _ = queries
+    want = est.transform(q, seed=0)
+    cold = NomadProjection.from_checkpoint(ckdir)
+    got = cold.transform(q, seed=0)  # never saw x
+    np.testing.assert_array_equal(want, got)
+
+
+def test_frozen_map_from_checkpoint_standalone(fitted, queries):
+    est, _, _, _, ckdir = fitted
+    q, _ = queries
+    fz = FrozenMap.from_checkpoint(ckdir)
+    assert fz.n_points == N and fz.dim == DIM
+    res = MapServer(fz).transform(q, seed=0)
+    assert isinstance(res, TransformResult)
+    np.testing.assert_array_equal(res.embedding, est.transform(q, seed=0))
+
+
+def test_frozen_map_from_checkpoint_needs_index_cache(tmp_path):
+    from repro.checkpoint import Checkpointer
+
+    ck = Checkpointer(str(tmp_path))
+    ck.save(0, {"theta": np.zeros((8, 2), np.float32)}, metadata={"epoch": 0})
+    with pytest.raises(FileNotFoundError, match="index"):
+        FrozenMap.from_checkpoint(str(tmp_path))
+
+
+def test_transform_without_fit_or_checkpoint_raises():
+    with pytest.raises(RuntimeError, match="fit"):
+        NomadProjection(CFG).transform(np.zeros((4, DIM), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# The map is frozen
+# ---------------------------------------------------------------------------
+
+
+def test_transform_never_mutates_fitted_theta(fitted, queries):
+    est, res, _, _, _ = fitted
+    q, _ = queries
+    before = res.embedding.copy()
+    theta_before = np.asarray(est.map_server().frozen.theta_rows).copy()
+    means_before = np.asarray(est.map_server().frozen.means).copy()
+    est.transform(q, seed=3)
+    est.transform(q, seed=4)
+    np.testing.assert_array_equal(before, res.embedding)
+    np.testing.assert_array_equal(
+        theta_before, np.asarray(est.map_server().frozen.theta_rows)
+    )
+    np.testing.assert_array_equal(
+        means_before, np.asarray(est.map_server().frozen.means)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Placement semantics
+# ---------------------------------------------------------------------------
+
+
+def test_transform_result_fields(fitted, queries):
+    est, _, _, _, _ = fitted
+    q, _ = queries
+    r = est.map_server().transform(q, seed=0)
+    assert r.n_queries == NQ and r.embedding.shape == (NQ, CFG.out_dim)
+    assert r.cells.shape == (NQ,)
+    assert (r.cells >= 0).all() and (r.cells < CFG.n_clusters).all()
+    k = CFG.n_neighbors
+    assert r.neighbor_ids.shape == (NQ, k) and r.neighbor_dists.shape == (NQ, k)
+    live = r.neighbor_ids >= 0
+    assert live.any()
+    assert (r.neighbor_ids[live] < N).all()
+    # distances ascend within each row (dead edges are +inf at the tail)
+    d = np.where(live, r.neighbor_dists, np.inf)
+    assert (np.diff(d, axis=1) >= -1e-6).all()
+    assert len(r.batch_latency_s) == -(-NQ // CFG.serve_microbatch)
+    assert all(t > 0 for t in r.batch_latency_s)
+
+
+def test_queries_identical_to_training_points_land_nearby(fitted):
+    """A query that IS a training row must be placed near that row's fitted
+    position (its kNN contains itself at distance 0)."""
+    est, res, x, _, _ = fitted
+    take = np.arange(0, 50)
+    r = est.map_server().transform(x[take], seed=0)
+    # self is the nearest frozen neighbor, at distance ~0
+    assert (r.neighbor_dists[:, 0] < 1e-3).all()
+    assert (r.neighbor_ids[:, 0] == take).all()
+    # the kNN init (steps=0) is a convex combination of fitted in-cell
+    # positions: it must land within the local neighborhood of the true
+    # position. (The optimised placement equals it only at equilibrium —
+    # this 4-epoch toy map is still expanding, so we pin the init.)
+    r0 = est.map_server(steps=0).transform(x[take], seed=0)
+    gap = np.linalg.norm(r0.embedding - res.embedding[take], axis=1)
+    nbr_radius = np.array(
+        [
+            np.linalg.norm(
+                res.embedding[ids[ids >= 0]] - res.embedding[i], axis=1
+            ).max()
+            for i, ids in zip(take, r0.neighbor_ids)
+        ]
+    )
+    assert (gap <= nbr_radius + 1e-12).all()
+
+
+def test_transform_steps_zero_is_pure_knn_init(fitted, queries):
+    est, _, _, _, _ = fitted
+    q, _ = queries
+    r = est.map_server(steps=0).transform(q, seed=0)
+    r2 = est.map_server(steps=0).transform(q, seed=99)
+    # no optimisation ⇒ no RNG consumption ⇒ seed-independent
+    np.testing.assert_array_equal(r.embedding, r2.embedding)
+    assert np.isnan(r.batch_loss).all()
+
+
+# ---------------------------------------------------------------------------
+# The shared fit/transform validation gate
+# ---------------------------------------------------------------------------
+
+
+def test_prepare_inputs_rejects_float64_everywhere(fitted):
+    est, _, _, _, _ = fitted
+    bad = np.zeros((4, DIM), np.float64)
+    with pytest.raises(ValueError, match="float64"):
+        est.transform(bad)
+    with pytest.raises(ValueError, match="float64"):
+        NomadProjection(CFG).fit(bad)
+    with pytest.raises(ValueError, match="float64"):
+        NomadProjection(CFG).fit_transform(bad)
+
+
+def test_prepare_inputs_rejects_nan_everywhere(fitted):
+    est, _, _, _, _ = fitted
+    bad = np.zeros((4, DIM), np.float32)
+    bad[1, 2] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        est.transform(bad)
+    with pytest.raises(ValueError, match="non-finite"):
+        NomadProjection(CFG).fit_transform(bad)
+
+
+def test_prepare_inputs_shape_and_dim_checks(fitted):
+    est, _, _, _, _ = fitted
+    with pytest.raises(ValueError, match="2-D"):
+        est.transform(np.zeros((DIM,), np.float32))
+    with pytest.raises(ValueError, match="dim"):
+        est.transform(np.zeros((4, DIM + 1), np.float32))
+
+
+def test_prepare_inputs_coerces_integer_and_half():
+    out = prepare_inputs(np.ones((3, 4), np.int64))
+    assert out.dtype == np.float32
+    out = prepare_inputs(np.ones((3, 4), np.float16))
+    assert out.dtype == np.float32
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="serve_strategy"):
+        NomadConfig(serve_strategy="pmap")
+    with pytest.raises(ValueError, match="serve_microbatch"):
+        NomadConfig(serve_microbatch=0)
+    with pytest.raises(ValueError, match="transform_steps"):
+        NomadConfig(transform_steps=-1)
