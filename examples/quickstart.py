@@ -58,6 +58,12 @@ def main():
     ap.add_argument("--epochs", type=int, default=40)
     ap.add_argument("--clusters", type=int, default=16)
     ap.add_argument("--checkpoint-dir", default="", help="enable checkpoint/resume")
+    ap.add_argument(
+        "--store", action="store_true",
+        help="round-trip the corpus through a sharded on-disk store and fit "
+        "from disk (the larger-than-RAM ingestion path; same map bit-for-bit "
+        "when cfg.chunk_rows matches)",
+    )
     args = ap.parse_args()
 
     n, dim, comps = args.n, args.dim, 12
@@ -72,8 +78,20 @@ def main():
         strategy="auto",                             # local vs sharded, from devices
         checkpoint_dir=args.checkpoint_dir,
     )
+    fit_input = x
+    if args.store:
+        import tempfile
+
+        from repro.data.store import write_sharded
+
+        store_dir = tempfile.mkdtemp(prefix="quickstart-store-")
+        fit_input = write_sharded(x, store_dir, rows_per_shard=4096)
+        print(f"fitting from disk-backed store at {store_dir} "
+              f"({len(fit_input._files)} shards) …")
     print("fitting NOMAD Projection …")
-    res = NomadProjection(cfg).fit(x, callbacks=Progress())
+    res = NomadProjection(cfg).fit(fit_input, callbacks=Progress())
+    if args.store:
+        assert res.index_build_strategy == "streamed", res.index_build_strategy
     print(f"done in {res.wall_time_s:.1f}s "
           f"({np.mean(res.epoch_times[1:] or res.epoch_times):.2f}s/epoch after warmup) "
           f"[strategy={res.strategy}, shards={res.n_shards}]")

@@ -277,6 +277,20 @@ class NomadConfig:
     build_max_rounds: int = 16  # device bidding rounds before host fallback
     build_candidates: int = 32  # nearest-centroid candidates cached per row
 
+    # out-of-core ingestion (repro.data.store): corpora too big for host RAM
+    # stream through an EmbeddingStore in `chunk_rows`-row chunks. 0 keeps
+    # the resident path for in-memory arrays (today's behaviour) and picks a
+    # default chunk for store inputs; >0 forces the *streamed* build/init
+    # path for every input container — chunking fixes the f32 accumulation
+    # order, so fit(store) and fit(ndarray) of the same data are then
+    # bit-identical (tested; with the default store_dtype — a lossy spill
+    # dtype rounds the disk-backed branch's x_rows, so bit-equality holds
+    # only at "float32"). `store_dtype` is the on-disk dtype of stores
+    # the pipeline itself writes (the permuted x_rows spill): bfloat16
+    # halves the disk/PCIe footprint; accumulation stays float32 on device.
+    chunk_rows: int = 0
+    store_dtype: str = "float32"  # "float32" | "float16" | "bfloat16"
+
     # loss (paper §3.3)
     n_noise: int = 64  # |M| noise samples per head
     n_exact_negatives: int = 16  # samples drawn from non-approximated cells
@@ -344,6 +358,13 @@ class NomadConfig:
                 "build_block_rows, build_max_rounds and build_candidates "
                 "must be >= 1"
             )
+        if self.chunk_rows < 0:
+            raise ValueError("chunk_rows must be >= 0 (0 = auto)")
+        if self.store_dtype not in ("float32", "float16", "bfloat16"):
+            raise ValueError(
+                f"unknown store_dtype {self.store_dtype!r} "
+                "(want 'float32'|'float16'|'bfloat16')"
+            )
         if self.serve_strategy not in ("auto", "local", "sharded"):
             raise ValueError(
                 f"unknown serve_strategy {self.serve_strategy!r} "
@@ -381,6 +402,14 @@ class NomadConfig:
         if self.transform_lr > 0:
             return self.transform_lr
         return self.resolved_lr0() / self.batch_size / max(self.n_epochs, 1)
+
+    def resolved_chunk_rows(self) -> int:
+        """The row-chunk size streamed pipeline stages read stores with."""
+        if self.chunk_rows > 0:
+            return self.chunk_rows
+        from repro.data.store import DEFAULT_CHUNK_ROWS
+
+        return DEFAULT_CHUNK_ROWS
 
     def resolved_steps_per_epoch(self) -> int:
         if self.steps_per_epoch:

@@ -223,14 +223,59 @@ def _config_digest(cfg: NomadConfig) -> dict:
     return d
 
 
-def prepare_inputs(x, dim: Optional[int] = None, caller: str = "fit") -> np.ndarray:
+def prepare_inputs(
+    x, dim: Optional[int] = None, caller: str = "fit", chunk_rows: int = 0
+):
     """The one validation/dtype-coercion gate for ``fit`` AND ``transform``.
 
     Integer and half-precision inputs are upcast to float32 (the pipeline's
     native dtype); float64 is *rejected* rather than silently halved so the
     precision loss stays a caller decision; NaN/Inf fail with the same
     actionable error everywhere.
+
+    Out-of-core inputs — an :class:`repro.data.store.EmbeddingStore`, an
+    ``np.memmap``, or a path to a ``.npy``/sharded-store directory — are
+    validated **per chunk** (``chunk_rows`` rows at a time, default 8192)
+    and returned as a store the caller streams from: neither the float32
+    cast nor the NaN scan ever allocates a full-size temporary. In-memory
+    arrays keep the resident behaviour and return an ``np.ndarray``.
     """
+    import os as _os
+
+    from repro.data.store import DEFAULT_CHUNK_ROWS, as_store, is_store
+
+    if (
+        is_store(x)
+        or isinstance(x, np.memmap)
+        or isinstance(x, (str, _os.PathLike))
+    ):
+        st = as_store(x)
+        if st.dtype_name == "float64":
+            raise ValueError(
+                f"{caller}: x is float64 — the whole pipeline (index build, "
+                "kernels, serving) runs float32; pass x.astype(np.float32) "
+                "explicitly so the precision cut is your call, not a silent one"
+            )
+        if dim is not None and st.dim != dim:
+            raise ValueError(
+                f"{caller}: x has dim {st.dim} but the fitted map expects "
+                f"dim {dim} — queries must live in the training feature space"
+            )
+        n_bad = 0
+        for _s, chunk in st.iter_chunks(
+            chunk_rows if chunk_rows > 0 else DEFAULT_CHUNK_ROWS
+        ):
+            finite = np.isfinite(chunk)
+            if not finite.all():
+                n_bad += int(chunk.size - finite.sum())
+        if n_bad:
+            raise ValueError(
+                f"{caller}: x contains {n_bad} non-finite values (NaN/Inf) — "
+                "clean or impute before projecting; a single NaN poisons the "
+                "k-means statistics and every distance downstream"
+            )
+        return st
+
     x = np.asarray(x)
     if x.ndim != 2:
         raise ValueError(
@@ -354,6 +399,16 @@ class NomadProjection:
     ) -> FitResult:
         """Fit the map. ``resume=True`` continues from ``cfg.checkpoint_dir``.
 
+        ``x`` may be an in-memory array **or** a disk-backed corpus — an
+        :class:`repro.data.store.EmbeddingStore`, an ``np.memmap``, or a
+        path to a ``.npy`` / sharded-store directory. Store inputs stream
+        through the whole pipeline (per-chunk validation, streamed §3.2
+        index build, streamed PCA init); the epoch loop itself touches only
+        θ and the O(N·k) index arrays, never the corpus, so a fit from disk
+        keeps host RSS at O(chunk + K·D + N·k). With the same
+        ``cfg.chunk_rows`` set, fit(store) and fit(ndarray) of identical
+        rows are bit-equal (chunking pins the f32 accumulation order).
+
         ``callback`` is the deprecated bare ``fn(epoch, embedding, loss)``
         form; prefer ``callbacks=`` with a
         :class:`repro.core.strategy.FitCallbacks`.
@@ -378,7 +433,7 @@ class NomadProjection:
         from repro.index.build import IndexBuilder
 
         cfg = self.cfg
-        x = prepare_inputs(x, caller="fit")
+        x = prepare_inputs(x, caller="fit", chunk_rows=cfg.chunk_rows)
         t0 = time.time()
         events = as_callbacks(callbacks, callback)
         resume = self._resume_default if resume is None else resume
@@ -598,10 +653,26 @@ class NomadProjection:
         """
         return self.map_server().transform(x, seed=seed).embedding
 
-    def _init_theta(self, x: np.ndarray, index: "AnnIndex") -> jax.Array:
+    def _init_theta(self, x, index: "AnnIndex") -> jax.Array:
+        from repro.data.store import as_store, is_store
+
         cfg = self.cfg
         if cfg.init == "pca":
-            th0 = np.asarray(pca_init(jnp.asarray(x), cfg.out_dim, cfg.init_scale))
+            if is_store(x) or cfg.chunk_rows > 0:
+                # the streamed init: same chunk schedule as the streamed
+                # build, so fit(store) ≡ fit(ndarray) stays bit-exact
+                from repro.core.pca import pca_init_streamed
+
+                th0 = pca_init_streamed(
+                    as_store(x),
+                    cfg.out_dim,
+                    cfg.init_scale,
+                    chunk_rows=cfg.resolved_chunk_rows(),
+                )
+            else:
+                th0 = np.asarray(
+                    pca_init(jnp.asarray(x), cfg.out_dim, cfg.init_scale)
+                )
         else:
             rng = np.random.default_rng(cfg.seed)
             th0 = rng.normal(0, cfg.init_scale, (x.shape[0], cfg.out_dim)).astype(

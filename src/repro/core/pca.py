@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def pca_init(x: jax.Array, out_dim: int = 2, scale: float = 1e-4, max_exact_dim: int = 2048):
@@ -33,3 +34,82 @@ def pca_init(x: jax.Array, out_dim: int = 2, scale: float = 1e-4, max_exact_dim:
     proj = xc @ comps
     std = jnp.std(proj, axis=0, keepdims=True)
     return proj / jnp.maximum(std, 1e-12) * scale
+
+
+def pca_init_streamed(
+    store,
+    out_dim: int = 2,
+    scale: float = 1e-4,
+    chunk_rows: int = 0,
+    max_exact_dim: int = 2048,
+):
+    """:func:`pca_init` over a :class:`repro.data.store.EmbeddingStore`.
+
+    Never materialises the corpus: the mean and the D×D covariance are
+    accumulated over ``chunk_rows``-row chunks (double-buffered disk
+    reads), and only the (N, out_dim) projection — the *output* of the
+    init — lives in host memory. Beyond ``max_exact_dim`` the randomized
+    range-finder runs the same way, one streamed pass per power iteration.
+    Chunk boundaries depend only on (N, chunk_rows), so two stores holding
+    the same rows produce bit-identical inits.
+    """
+    from repro.data.store import DEFAULT_CHUNK_ROWS, stream_chunks
+    from repro.index.kmeans import _pad_chunk
+
+    n, D = store.shape
+    chunk_rows = max(1, min(chunk_rows or DEFAULT_CHUNK_ROWS, n))
+
+    @jax.jit
+    def sum_partial(acc, xb, w):
+        return acc + jnp.sum(xb * w[:, None], axis=0)
+
+    acc = jnp.zeros((D,), jnp.float32)
+    for _s, chunk in stream_chunks(store, chunk_rows):
+        xb, w = _pad_chunk(chunk, chunk_rows)
+        acc = sum_partial(acc, jnp.asarray(xb), jnp.asarray(w))
+    mu = acc[None, :] / n
+
+    @jax.jit
+    def cov_partial(acc, xb, w, mu):
+        xc = (xb - mu) * w[:, None]
+        return acc + xc.T @ xc
+
+    if D <= max_exact_dim:
+        cov = jnp.zeros((D, D), jnp.float32)
+        for _s, chunk in stream_chunks(store, chunk_rows):
+            xb, w = _pad_chunk(chunk, chunk_rows)
+            cov = cov_partial(cov, jnp.asarray(xb), jnp.asarray(w), mu)
+        _evals, evecs = jnp.linalg.eigh(cov / n)
+        comps = evecs[:, ::-1][:, :out_dim]
+    else:  # randomized power iteration, one streamed pass per iteration
+        key = jax.random.key(17)
+        q = jax.random.normal(key, (D, out_dim + 8), jnp.float32)
+
+        @jax.jit
+        def power_partial(acc, xb, w, mu, q):
+            xc = (xb - mu) * w[:, None]
+            return acc + xc.T @ (xc @ q)
+
+        for _ in range(4):
+            acc_q = jnp.zeros_like(q)
+            for _s, chunk in stream_chunks(store, chunk_rows):
+                xb, w = _pad_chunk(chunk, chunk_rows)
+                acc_q = power_partial(acc_q, jnp.asarray(xb), jnp.asarray(w), mu, q)
+            q, _ = jnp.linalg.qr(acc_q)
+        b_rows = []
+        for _s, chunk in stream_chunks(store, chunk_rows):
+            b_rows.append(np.asarray((jnp.asarray(chunk) - mu) @ q))
+        _, _, vt = jnp.linalg.svd(jnp.asarray(np.concatenate(b_rows)), full_matrices=False)
+        comps = (q @ vt.T)[:, :out_dim]
+
+    proj = np.empty((n, out_dim), np.float32)
+
+    @jax.jit
+    def project(xb):
+        return (xb - mu) @ comps
+
+    for s, chunk in stream_chunks(store, chunk_rows):
+        proj[s : s + chunk.shape[0]] = np.asarray(project(jnp.asarray(chunk)))
+    pj = jnp.asarray(proj)
+    std = jnp.std(pj, axis=0, keepdims=True)
+    return np.asarray(pj / jnp.maximum(std, 1e-12) * scale)

@@ -1,3 +1,25 @@
+from repro.data.store import (
+    ArrayStore,
+    EmbeddingStore,
+    MemmapStore,
+    ShardedStore,
+    as_store,
+    is_store,
+    stream_chunks,
+    write_sharded,
+)
 from repro.data.synthetic import gaussian_mixture, hierarchical_mixture, swiss_roll
 
-__all__ = ["gaussian_mixture", "hierarchical_mixture", "swiss_roll"]
+__all__ = [
+    "ArrayStore",
+    "EmbeddingStore",
+    "MemmapStore",
+    "ShardedStore",
+    "as_store",
+    "is_store",
+    "stream_chunks",
+    "write_sharded",
+    "gaussian_mixture",
+    "hierarchical_mixture",
+    "swiss_roll",
+]

@@ -48,30 +48,61 @@ class TokenStream:
 
 
 class Prefetcher:
-    """Runs ``make(step)`` on a worker thread, ``depth`` batches ahead."""
+    """Runs ``make(step)`` on a worker thread, ``depth`` batches ahead.
 
-    def __init__(self, make, start_step: int = 0, depth: int = 2):
+    ``max_steps`` bounds the worker to that many items (for one finite pass
+    over a chunked store); ``None`` free-runs forever (the LM stream). Each
+    item is built **once** and only the queue put retries on back-pressure —
+    a slow consumer never triggers a re-read. A ``make`` exception is
+    enqueued and re-raised in the consumer, so a failed disk read surfaces
+    instead of hanging the pipeline on a dead worker.
+    """
+
+    def __init__(
+        self, make, start_step: int = 0, depth: int = 2, max_steps=None
+    ):
         self._make = make
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._step = start_step
+        self._max_steps = max_steps
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
-    def _run(self):
-        step = self._step
+    def _put(self, item) -> bool:
+        """Retry-put until accepted or close(); True iff enqueued."""
         while not self._stop.is_set():
             try:
-                self._q.put((step, self._make(step)), timeout=0.1)
-                step += 1
+                self._q.put(item, timeout=0.1)
+                return True
             except queue.Full:
                 continue
+        return False
+
+    def _run(self):
+        step = self._step
+        made = 0
+        while not self._stop.is_set():
+            if self._max_steps is not None and made >= self._max_steps:
+                return
+            try:
+                item = (step, self._make(step))
+            except BaseException as e:  # surfaces in the consumer
+                self._put((step, e))
+                return
+            if not self._put(item):
+                return
+            step += 1
+            made += 1
 
     def __iter__(self) -> Iterator:
         return self
 
     def __next__(self):
-        return self._q.get()
+        step, item = self._q.get()
+        if isinstance(item, BaseException):
+            raise item
+        return step, item
 
     def close(self):
         self._stop.set()

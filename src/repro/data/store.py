@@ -1,0 +1,563 @@
+"""Out-of-core embedding stores: chunked row access over corpora on disk.
+
+The paper's headline demonstration — a map of Multilingual Wikipedia —
+needs an ``(N, D)`` float32 matrix that does not fit in host RAM. Every
+consumer in this repo (``prepare_inputs``, the streamed
+:class:`repro.index.build.IndexBuilder` path, PCA init, ``MapServer``
+query batches) therefore reads through ONE interface,
+:class:`EmbeddingStore`:
+
+* :class:`ArrayStore`   — an in-memory ``np.ndarray`` (or ``np.memmap``)
+  behind the same chunked API; the zero-copy adapter the equivalence
+  tests stream through.
+* :class:`MemmapStore`  — a single ``.npy`` file opened with
+  ``mmap_mode="r"``; pages are file-backed and evictable, so host RSS
+  stays bounded by what the OS keeps resident.
+* :class:`ShardedStore` — a directory of row-block shards
+  (``shard-00000.npy``, …) described by ``meta.json``. Shards are read
+  with *eager* ``np.load`` one at a time (anonymous memory, freed after
+  the chunk), which keeps the RSS high-watermark at O(shard) — the
+  format the larger-than-RAM pipeline is built around.
+
+``read()`` always returns **float32** rows regardless of the storage
+dtype — the cast happens per chunk, never as a full-array temporary.
+Storage dtypes: ``float32``, ``float16``, and ``bfloat16`` (halves the
+disk/PCIe footprint; accumulation stays f32 on device). NumPy cannot
+round-trip ``ml_dtypes.bfloat16`` through ``.npy`` (the logical dtype
+degrades to raw ``|V2``), so bf16 shards hold the raw ``uint16`` bit
+patterns and ``meta.json`` records the logical dtype.
+
+``write_sharded()`` converts any array/store/chunk-iterator into the
+sharded layout; the CLI front end is::
+
+    python -m repro.data.store convert corpus.npy corpus_store/ \
+        --rows-per-shard 65536 --dtype bfloat16
+    python -m repro.data.store info corpus_store/
+
+``stream_chunks()`` is the double-buffered host→device feed every
+streamed pipeline stage uses: a background :class:`repro.data.loader.
+Prefetcher` reads chunk *i+1* from disk while the device works on *i*.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable, Iterator, Optional, Tuple, Union
+
+import numpy as np
+
+META_NAME = "meta.json"
+STORE_FORMAT = "repro-embedding-store"
+SHARD_PATTERN = "shard-{:05d}.npy"
+
+#: storage dtypes a store may hold on disk (reads always upcast to f32)
+STORE_DTYPES = ("float32", "float16", "bfloat16")
+
+#: the chunk size streamed consumers default to when cfg.chunk_rows is 0 —
+#: the ONE definition (NomadConfig.resolved_chunk_rows, prepare_inputs and
+#: pca_init_streamed all resolve through it; drift would break the
+#: "chunk boundaries depend only on (N, chunk_rows)" contract)
+DEFAULT_CHUNK_ROWS = 8192
+
+
+def _bfloat16_dtype():
+    """The ml_dtypes bfloat16 dtype, or an actionable error without it."""
+    try:
+        import ml_dtypes
+    except ImportError as e:  # pragma: no cover - env without jax's dep
+        raise RuntimeError(
+            "bfloat16 stores need the ml_dtypes package (shipped with jax); "
+            "install it or use store dtype 'float32'/'float16'"
+        ) from e
+    return np.dtype(ml_dtypes.bfloat16)
+
+
+def _check_store_dtype(name: str) -> str:
+    if name not in STORE_DTYPES:
+        raise ValueError(
+            f"unknown store dtype {name!r} (want one of {STORE_DTYPES})"
+        )
+    return name
+
+
+def _encode(chunk: np.ndarray, dtype: str) -> np.ndarray:
+    """float rows → the on-disk representation of ``dtype``."""
+    if dtype == "bfloat16":
+        # raw bit patterns: .npy cannot represent the logical bf16 dtype
+        return chunk.astype(_bfloat16_dtype()).view(np.uint16)
+    return chunk.astype(np.dtype(dtype), copy=False)
+
+
+def _decode(raw: np.ndarray, dtype: str) -> np.ndarray:
+    """On-disk representation → float32 rows (the f32-accumulation side)."""
+    if dtype == "bfloat16":
+        return raw.view(_bfloat16_dtype()).astype(np.float32)
+    return raw.astype(np.float32, copy=False)
+
+
+def _disk_dtype(dtype: str) -> np.dtype:
+    """The numpy dtype shard *files* hold (bf16 → raw uint16 bits)."""
+    _check_store_dtype(dtype)
+    return np.dtype(np.uint16) if dtype == "bfloat16" else np.dtype(dtype)
+
+
+def _commit_meta(
+    out_dir: str, n_rows: int, dim: int, dtype: str, files, shard_rows
+) -> None:
+    """Write ``meta.json`` atomically (tmp + rename) — the single place the
+    store format is stamped; every writer (``write_sharded``, the index
+    build's x_rows spill) commits through it, so a crashed write never
+    leaves a directory that parses as a store."""
+    meta = {
+        "format": STORE_FORMAT,
+        "version": 1,
+        "n_rows": int(n_rows),
+        "dim": int(dim),
+        "dtype": dtype,
+        "shards": list(files),
+        "shard_rows": [int(r) for r in shard_rows],
+    }
+    tmp = os.path.join(out_dir, META_NAME + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=1)
+    os.replace(tmp, os.path.join(out_dir, META_NAME))
+
+
+# ---------------------------------------------------------------------------
+# The interface
+# ---------------------------------------------------------------------------
+
+
+class EmbeddingStore:
+    """Uniform chunked-read interface over an ``(N, D)`` row source.
+
+    Subclasses set :attr:`shape`, :attr:`dtype_name` (the *storage*
+    dtype), :attr:`path` (``None`` for in-memory) and implement
+    :meth:`_read_raw`. Everything a consumer touches — :meth:`read`,
+    :meth:`read_rows`, :meth:`iter_chunks` — returns float32.
+    """
+
+    shape: Tuple[int, int]
+    dtype_name: str
+    path: Optional[str] = None
+
+    # -- to be implemented -----------------------------------------------------
+
+    def _read_raw(self, start: int, stop: int) -> np.ndarray:
+        raise NotImplementedError
+
+    # -- the shared surface ----------------------------------------------------
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.shape[1]
+
+    def __len__(self) -> int:
+        return self.shape[0]
+
+    def read(self, start: int, stop: int) -> np.ndarray:
+        """Rows ``[start, stop)`` as a float32 ``(stop-start, D)`` array."""
+        n = self.shape[0]
+        if not (0 <= start <= stop <= n):
+            raise IndexError(f"row range [{start}, {stop}) outside [0, {n})")
+        return _decode(self._read_raw(start, stop), self.dtype_name)
+
+    def read_rows(self, rows: np.ndarray) -> np.ndarray:
+        """Gather arbitrary rows (float32). Default: range-read per run of
+        consecutive indices — subclasses with cheaper gathers override."""
+        rows = np.asarray(rows, np.int64)
+        out = np.empty((rows.size, self.shape[1]), np.float32)
+        order = np.argsort(rows, kind="stable")
+        sorted_rows = rows[order]
+        s = 0
+        while s < sorted_rows.size:
+            e = s + 1
+            while e < sorted_rows.size and sorted_rows[e] == sorted_rows[e - 1] + 1:
+                e += 1
+            block = self.read(int(sorted_rows[s]), int(sorted_rows[e - 1]) + 1)
+            out[order[s:e]] = block
+            s = e
+        return out
+
+    def iter_chunks(
+        self, chunk_rows: int
+    ) -> Iterator[Tuple[int, np.ndarray]]:
+        """Yield ``(start, chunk)`` covering all rows in order; the final
+        chunk is ragged when ``chunk_rows`` does not divide N."""
+        if chunk_rows < 1:
+            raise ValueError("chunk_rows must be >= 1")
+        n = self.shape[0]
+        for s in range(0, n, chunk_rows):
+            yield s, self.read(s, min(s + chunk_rows, n))
+
+    def materialize(self) -> np.ndarray:
+        """The full float32 array — an explicit O(N·D) host allocation."""
+        out = np.empty(self.shape, np.float32)
+        for s, chunk in self.iter_chunks(max(1, min(65536, self.shape[0]))):
+            out[s : s + chunk.shape[0]] = chunk
+        return out
+
+    def __array__(self, dtype=None, copy=None):
+        a = self.materialize()
+        return a.astype(dtype) if dtype is not None else a
+
+
+def is_store(x) -> bool:
+    """True iff ``x`` goes through the chunked-read interface."""
+    return isinstance(x, EmbeddingStore)
+
+
+# ---------------------------------------------------------------------------
+# Implementations
+# ---------------------------------------------------------------------------
+
+
+class ArrayStore(EmbeddingStore):
+    """An in-memory array (or ``np.memmap``) behind the store interface.
+
+    Wrapping costs nothing: reads are slices, cast to float32 per chunk —
+    a memmap input therefore never materialises a full-size temporary.
+    """
+
+    def __init__(self, x: np.ndarray):
+        if x.ndim != 2:
+            raise ValueError(f"expected a 2-D (n, dim) array, got {x.shape}")
+        self._x = x
+        self.shape = (int(x.shape[0]), int(x.shape[1]))
+        self.dtype_name = str(x.dtype)
+        self.path = getattr(x, "filename", None)
+
+    def _read_raw(self, start, stop):
+        return self._x[start:stop]
+
+    def read(self, start, stop):
+        chunk = self._x[start:stop]
+        return np.asarray(chunk, np.float32)  # per-chunk cast/copy only
+
+    def read_rows(self, rows):
+        return np.asarray(self._x[np.asarray(rows, np.int64)], np.float32)
+
+
+class MemmapStore(EmbeddingStore):
+    """A single ``.npy`` file opened with ``mmap_mode="r"``."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._mm = np.load(self.path, mmap_mode="r")
+        if self._mm.ndim != 2:
+            raise ValueError(
+                f"{path}: expected a 2-D (n, dim) .npy, got shape {self._mm.shape}"
+            )
+        if self._mm.dtype.kind == "V":
+            raise ValueError(
+                f"{path}: raw void dtype — bfloat16 cannot round-trip through "
+                "a bare .npy; convert it to a sharded store "
+                "(python -m repro.data.store convert) which records the "
+                "logical dtype in meta.json"
+            )
+        self.shape = (int(self._mm.shape[0]), int(self._mm.shape[1]))
+        self.dtype_name = str(self._mm.dtype)
+
+    def _read_raw(self, start, stop):
+        return self._mm[start:stop]
+
+    def read(self, start, stop):
+        return np.asarray(self._mm[start:stop], np.float32)
+
+    def read_rows(self, rows):
+        return np.asarray(self._mm[np.asarray(rows, np.int64)], np.float32)
+
+
+class ShardedStore(EmbeddingStore):
+    """A directory of row-block shards + ``meta.json``.
+
+    Shards are loaded *eagerly* (regular ``np.load``, anonymous memory)
+    one at a time with a one-shard decoded cache, so a sequential pass
+    keeps host RSS at O(shard) — unlike a memmap, whose touched pages
+    linger in RSS until the OS needs them back.
+    """
+
+    def __init__(self, directory: str):
+        self.path = str(directory)
+        meta_path = os.path.join(self.path, META_NAME)
+        if not os.path.exists(meta_path):
+            raise FileNotFoundError(
+                f"{self.path}: no {META_NAME} — not an embedding store "
+                "(create one with repro.data.store.write_sharded)"
+            )
+        with open(meta_path) as f:
+            meta = json.load(f)
+        if meta.get("format") != STORE_FORMAT:
+            raise ValueError(
+                f"{meta_path}: format {meta.get('format')!r} is not "
+                f"{STORE_FORMAT!r}"
+            )
+        self.dtype_name = _check_store_dtype(meta["dtype"])
+        self.shape = (int(meta["n_rows"]), int(meta["dim"]))
+        self._files = list(meta["shards"])
+        self._rows = np.asarray(meta["shard_rows"], np.int64)
+        if len(self._files) != self._rows.size or self._rows.size == 0:
+            raise ValueError(f"{meta_path}: empty or inconsistent shard list")
+        if (self._rows <= 0).any():
+            bad = int(np.argmax(self._rows <= 0))
+            raise ValueError(
+                f"{meta_path}: shard {self._files[bad]!r} declares "
+                f"{int(self._rows[bad])} rows — every shard must hold at "
+                "least one row"
+            )
+        if int(self._rows.sum()) != self.shape[0]:
+            raise ValueError(
+                f"{meta_path}: shard rows sum to {int(self._rows.sum())} "
+                f"but n_rows is {self.shape[0]}"
+            )
+        self._starts = np.concatenate([[0], np.cumsum(self._rows)])
+        self._cache: Tuple[int, Optional[np.ndarray]] = (-1, None)
+
+    def _shard_f32(self, i: int) -> np.ndarray:
+        ci, chunk = self._cache
+        if ci == i and chunk is not None:
+            return chunk
+        raw = np.load(os.path.join(self.path, self._files[i]))
+        want = (int(self._rows[i]), self.shape[1])
+        if raw.shape != want:
+            raise ValueError(
+                f"{self._files[i]}: shape {raw.shape} does not match "
+                f"meta.json ({want})"
+            )
+        chunk = _decode(raw, self.dtype_name)
+        self._cache = (i, chunk)
+        return chunk
+
+    def _read_raw(self, start, stop):  # pragma: no cover - read() overrides
+        raise NotImplementedError
+
+    def read(self, start, stop):
+        n = self.shape[0]
+        if not (0 <= start <= stop <= n):
+            raise IndexError(f"row range [{start}, {stop}) outside [0, {n})")
+        if start == stop:
+            return np.empty((0, self.shape[1]), np.float32)
+        i0 = int(np.searchsorted(self._starts, start, side="right")) - 1
+        i1 = int(np.searchsorted(self._starts, stop, side="left")) - 1
+        parts = []
+        for i in range(i0, i1 + 1):
+            lo = max(start, int(self._starts[i])) - int(self._starts[i])
+            hi = min(stop, int(self._starts[i + 1])) - int(self._starts[i])
+            parts.append(self._shard_f32(i)[lo:hi])
+        if len(parts) == 1:
+            return np.ascontiguousarray(parts[0])
+        return np.concatenate(parts, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Writing
+# ---------------------------------------------------------------------------
+
+
+def _chunk_source(
+    source: Union[np.ndarray, EmbeddingStore, Iterable[np.ndarray]],
+    chunk_rows: int,
+) -> Iterator[np.ndarray]:
+    if isinstance(source, EmbeddingStore):
+        for _s, chunk in source.iter_chunks(chunk_rows):
+            yield chunk
+    elif isinstance(source, np.ndarray):
+        for s in range(0, source.shape[0], chunk_rows):
+            yield source[s : s + chunk_rows]
+    else:  # an iterable of 2-D row chunks (streamed generation)
+        for chunk in source:
+            yield np.asarray(chunk)
+
+
+def write_sharded(
+    source: Union[np.ndarray, EmbeddingStore, Iterable[np.ndarray]],
+    out_dir: str,
+    *,
+    rows_per_shard: int = 65536,
+    dtype: str = "float32",
+) -> ShardedStore:
+    """Stream ``source`` into a sharded store at ``out_dir``.
+
+    ``source`` may be an array, another store, or an iterable of 2-D row
+    chunks (for corpora generated on the fly). Rows are re-blocked to
+    exactly ``rows_per_shard`` per shard (ragged final shard), encoded to
+    ``dtype``, and ``meta.json`` is committed last — a crashed convert
+    never leaves a directory that parses as a store.
+    """
+    _check_store_dtype(dtype)
+    if rows_per_shard < 1:
+        raise ValueError("rows_per_shard must be >= 1")
+    os.makedirs(out_dir, exist_ok=True)
+
+    files, shard_rows = [], []
+    dim = None
+    pending: list = []
+    pending_rows = 0
+
+    def flush(buf_rows: int):
+        nonlocal pending, pending_rows
+        block = pending[0] if len(pending) == 1 else np.concatenate(pending)
+        take, rest = block[:buf_rows], block[buf_rows:]
+        name = SHARD_PATTERN.format(len(files))
+        np.save(os.path.join(out_dir, name), _encode(take, dtype))
+        files.append(name)
+        shard_rows.append(int(take.shape[0]))
+        pending = [rest] if rest.shape[0] else []
+        pending_rows = int(rest.shape[0])
+
+    for chunk in _chunk_source(source, rows_per_shard):
+        if chunk.ndim != 2:
+            raise ValueError(f"source chunk has shape {chunk.shape}, want 2-D")
+        if dim is None:
+            dim = int(chunk.shape[1])
+        elif int(chunk.shape[1]) != dim:
+            raise ValueError(
+                f"source chunk dim {chunk.shape[1]} != first chunk dim {dim}"
+            )
+        if chunk.dtype == np.float64:
+            chunk = chunk.astype(np.float32)  # per-chunk, never full-array
+        pending.append(chunk)
+        pending_rows += int(chunk.shape[0])
+        while pending_rows >= rows_per_shard:
+            flush(rows_per_shard)
+    if pending_rows:
+        flush(pending_rows)
+    if not files:
+        raise ValueError("write_sharded: source produced no rows")
+
+    _commit_meta(out_dir, sum(shard_rows), dim, dtype, files, shard_rows)
+    return ShardedStore(out_dir)
+
+
+def copy_to_npy(store: EmbeddingStore, path: str, chunk_rows: int = 65536) -> str:
+    """Chunked store → single float32 ``.npy`` (memmap-written, O(chunk)
+    host RSS) — used to spill a store-backed index field beside an
+    ``index.npz`` cache."""
+    mm = np.lib.format.open_memmap(
+        path, mode="w+", dtype=np.float32, shape=store.shape
+    )
+    for s, chunk in store.iter_chunks(chunk_rows):
+        mm[s : s + chunk.shape[0]] = chunk
+    mm.flush()
+    del mm
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Resolution + streaming
+# ---------------------------------------------------------------------------
+
+
+def as_store(x) -> EmbeddingStore:
+    """Anything row-shaped → an :class:`EmbeddingStore`.
+
+    Accepts a store (returned as-is), an ``np.ndarray``/``np.memmap``
+    (wrapped zero-copy), a ``.npy`` path (memmap), or a sharded-store
+    directory.
+    """
+    if is_store(x):
+        return x
+    if isinstance(x, np.ndarray):
+        return ArrayStore(x)
+    if isinstance(x, (str, os.PathLike)):
+        p = os.fspath(x)
+        if os.path.isdir(p):
+            return ShardedStore(p)
+        if p.endswith(".npy"):
+            return MemmapStore(p)
+        raise ValueError(
+            f"{p}: not a sharded-store directory or a .npy file"
+        )
+    raise TypeError(
+        f"cannot adapt {type(x).__name__} into an EmbeddingStore "
+        "(want ndarray, store, .npy path, or store directory)"
+    )
+
+
+def stream_chunks(
+    store: EmbeddingStore, chunk_rows: int, *, depth: int = 2
+) -> Iterator[Tuple[int, np.ndarray]]:
+    """One double-buffered pass over ``store``: a background
+    :class:`repro.data.loader.Prefetcher` reads chunk *i+1* from disk
+    while the consumer (typically a device step) works on chunk *i*.
+
+    Yields the same ``(start, float32 chunk)`` schedule as
+    ``store.iter_chunks(chunk_rows)`` — chunk boundaries depend only on
+    ``(N, chunk_rows)``, never on the store's native shard layout, which
+    is what makes streamed results identical across containers.
+    """
+    from repro.data.loader import Prefetcher
+
+    n = store.shape[0]
+    n_chunks = max(1, -(-n // chunk_rows))
+
+    def make(step: int):
+        s = step * chunk_rows
+        return s, store.read(s, min(s + chunk_rows, n))
+
+    # max_steps bounds the worker to exactly one pass; a read error inside
+    # the worker re-raises here instead of hanging the consumer
+    pf = Prefetcher(make, depth=depth, max_steps=n_chunks)
+    try:
+        for _ in range(n_chunks):
+            _step, (s, chunk) = next(pf)
+            yield s, chunk
+    finally:
+        pf.close()
+
+
+# ---------------------------------------------------------------------------
+# CLI: python -m repro.data.store {convert,info}
+# ---------------------------------------------------------------------------
+
+
+def _main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.data.store",
+        description="Convert/inspect on-disk embedding stores.",
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    cv = sub.add_parser(
+        "convert", help="re-block a .npy / store into a sharded store"
+    )
+    cv.add_argument("src", help=".npy file or existing store directory")
+    cv.add_argument("out_dir", help="output sharded-store directory")
+    cv.add_argument("--rows-per-shard", type=int, default=65536)
+    cv.add_argument("--dtype", default="float32", choices=list(STORE_DTYPES))
+
+    info = sub.add_parser("info", help="describe a store")
+    info.add_argument("src", help=".npy file or store directory")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "convert":
+        st = write_sharded(
+            as_store(args.src),
+            args.out_dir,
+            rows_per_shard=args.rows_per_shard,
+            dtype=args.dtype,
+        )
+        print(
+            f"wrote {st.path}: {st.n_rows} rows x {st.dim} dims, "
+            f"dtype {st.dtype_name}, {len(st._files)} shard(s)"
+        )
+        return 0
+    st = as_store(args.src)
+    kind = type(st).__name__
+    print(f"{kind}: {st.n_rows} rows x {st.dim} dims, dtype {st.dtype_name}")
+    if isinstance(st, ShardedStore):
+        print(f"shards: {len(st._files)} (rows per shard: {st._rows.tolist()})")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(_main())

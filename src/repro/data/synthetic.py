@@ -33,6 +33,49 @@ def gaussian_mixture(
     return x.astype(np.float32), labels
 
 
+def gaussian_mixture_store(
+    out_dir: str,
+    n: int,
+    dim: int,
+    n_components: int = 10,
+    spread: float = 0.15,
+    seed: int = 0,
+    *,
+    chunk_rows: int = 8192,
+    rows_per_shard: int = 65536,
+    dtype: str = "float32",
+):
+    """:func:`gaussian_mixture`, generated chunk-by-chunk straight into a
+    sharded on-disk store — the corpus never materialises in host RAM.
+
+    Returns ``(store, labels)``. ``np.random.Generator`` draws samples
+    sequentially from its bit stream, so chunked ``normal`` calls produce
+    exactly the rows one ``(n, dim)`` call would: the store holds the same
+    float32 values as ``gaussian_mixture(n, dim, ...)`` (tested), which is
+    what lets the RSS benchmark compare monolithic vs streamed builds of
+    the *same* data.
+    """
+    from repro.data.store import write_sharded
+
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 1, (n_components, dim))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    labels = rng.integers(0, n_components, n)
+
+    def chunks():
+        for s in range(0, n, chunk_rows):
+            lab = labels[s : s + chunk_rows]
+            yield (
+                centers[lab]
+                + rng.normal(0, spread / np.sqrt(dim), (lab.size, dim))
+            ).astype(np.float32)
+
+    store = write_sharded(
+        chunks(), out_dir, rows_per_shard=rows_per_shard, dtype=dtype
+    )
+    return store, labels
+
+
 def hierarchical_mixture(
     n: int,
     dim: int,

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 
 import numpy as np
 
@@ -35,6 +36,10 @@ from repro.configs.base import NomadConfig
 
 @dataclasses.dataclass
 class AnnIndex:
+    # (K·C, D) permuted vectors — an ndarray, or (out-of-core builds) a
+    # disk-backed repro.data.store.EmbeddingStore; training never reads it,
+    # so a streamed fit keeps host RSS free of the O(N·D) buffer. Serving
+    # (FrozenMap) materialises it to device explicitly.
     x_rows: np.ndarray
     knn_idx: np.ndarray
     knn_w: np.ndarray
@@ -59,7 +64,7 @@ class AnnIndex:
         return rows[self.perm]
 
 
-def data_fingerprint(x: np.ndarray, n_sample: int = 64) -> str:
+def data_fingerprint(x, n_sample: int = 64, block_rows: int = 65536) -> str:
     """Content hash of ``x``: shape + a deterministic row sample + a full
     float64 column-sum checksum.
 
@@ -67,14 +72,27 @@ def data_fingerprint(x: np.ndarray, n_sample: int = 64) -> str:
     the column sums make any perturbation visible unless it exactly cancels
     per column in float64 — good enough for the checkpoint index-cache
     staleness check at one full O(N·D) streaming pass, no O(N·D) hashing.
+
+    ``x`` may be an array or an :class:`repro.data.store.EmbeddingStore`.
+    The column sums accumulate over fixed ``block_rows`` blocks regardless
+    of the container (never the store's chunk_rows), so the same rows hash
+    the same whether they arrive in RAM, as a memmap, or sharded on disk.
+    (For N > block_rows this grouping differs from the pre-store whole-array
+    sum, so caches written by earlier versions at that size re-fingerprint
+    once — a one-time rebuild, warned about as a mismatch.)
     """
-    x = np.asarray(x)
-    n = x.shape[0]
+    from repro.data.store import as_store, is_store
+
+    st = x if is_store(x) else as_store(np.asarray(x))
+    n, d = st.shape
     idx = np.unique(np.linspace(0, max(n - 1, 0), min(n_sample, n)).astype(np.int64))
     h = hashlib.sha256()
-    h.update(repr(x.shape).encode())
-    h.update(np.ascontiguousarray(x[idx], dtype=np.float32).tobytes())
-    h.update(np.ascontiguousarray(x.sum(axis=0, dtype=np.float64)).tobytes())
+    h.update(repr((n, d)).encode())
+    h.update(np.ascontiguousarray(st.read_rows(idx), dtype=np.float32).tobytes())
+    colsum = np.zeros((d,), np.float64)
+    for s in range(0, n, block_rows):
+        colsum += st.read(s, min(s + block_rows, n)).sum(axis=0, dtype=np.float64)
+    h.update(np.ascontiguousarray(colsum).tobytes())
     return h.hexdigest()[:16]
 
 
@@ -86,10 +104,19 @@ def index_cache_path(checkpoint_dir: str) -> str:
 
 
 def save_index(index: AnnIndex, path: str) -> None:
-    """Persist an index as one .npz (used as the fit/resume on-disk cache)."""
-    np.savez(
-        path,
-        x_rows=index.x_rows,
+    """Persist an index as one .npz (used as the fit/resume on-disk cache).
+
+    A store-backed ``x_rows`` (out-of-core build) is spilled *chunked* into
+    a float32 ``.npy`` sidecar beside the npz — the O(N·D) buffer never
+    materialises in host RAM — and the npz records the sidecar's name.
+    This deliberately duplicates the build's own x_rows spill on disk: the
+    cache directory must stay **self-contained** (``from_checkpoint``
+    serving ships only the checkpoint dir, and a later refit may overwrite
+    a build spill it pointed into), so disk is traded for that guarantee.
+    """
+    from repro.data.store import copy_to_npy, is_store
+
+    fields = dict(
         knn_idx=index.knn_idx,
         knn_w=index.knn_w,
         counts=index.counts,
@@ -99,12 +126,27 @@ def save_index(index: AnnIndex, path: str) -> None:
         n_points=index.n_points,
         fingerprint=np.asarray(index.fingerprint),
     )
+    if is_store(index.x_rows):
+        sidecar = os.path.basename(path) + ".x_rows.npy"
+        copy_to_npy(index.x_rows, os.path.join(os.path.dirname(path) or ".", sidecar))
+        fields["x_rows_file"] = np.asarray(sidecar)
+    else:
+        fields["x_rows"] = index.x_rows
+    np.savez(path, **fields)
 
 
 def load_index(path: str) -> AnnIndex:
+    from repro.data.store import MemmapStore
+
     z = np.load(path)
+    if "x_rows_file" in z.files:  # store-backed cache: memmap the sidecar
+        x_rows = MemmapStore(
+            os.path.join(os.path.dirname(path) or ".", str(z["x_rows_file"]))
+        )
+    else:
+        x_rows = z["x_rows"]
     return AnnIndex(
-        x_rows=z["x_rows"],
+        x_rows=x_rows,
         knn_idx=z["knn_idx"],
         knn_w=z["knn_w"],
         counts=z["counts"],

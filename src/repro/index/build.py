@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import time
 from contextlib import contextmanager
 from typing import Optional
@@ -189,17 +190,24 @@ def _capacity_rounds_sharded(
     return run(x_sharded, cents)
 
 
+def _row_gather(x, rows: np.ndarray) -> np.ndarray:
+    """Rows of ``x`` whether it is an ndarray or an EmbeddingStore."""
+    from repro.data.store import is_store
+
+    return x.read_rows(rows) if is_store(x) else x[rows]
+
+
 def _force_place_host(x, cents, assign, free, chunk: int = 8192):
     """Place stragglers (rows unassigned after ``max_rounds``) into their
     nearest centroid with space — O(T·K) host *compute*, chunked so the
     live distance block never exceeds (chunk, K) even if contention drives
-    T toward N."""
+    T toward N. ``x`` may be an array or a disk-backed store."""
     todo = np.flatnonzero(assign < 0)
     if todo.size == 0:
         return assign, 0
     for s in range(0, todo.size, chunk):
         block = todo[s : s + chunk]
-        d2 = _np_dist2(x[block], cents)
+        d2 = _np_dist2(_row_gather(x, block), cents)
         for t, row in zip(block, np.argsort(d2, axis=1)):
             for c in row:
                 if free[c] > 0:
@@ -297,6 +305,147 @@ def _finalize_knn(knn_local, knn_w, K: int, C: int):
 
 
 # ---------------------------------------------------------------------------
+# Streamed (out-of-core) stages: disk-backed stores, O(chunk) host RSS
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, donate_argnums=(0, 1), static_argnames=("n_cand", "impl", "block")
+)
+def _cand_write_chunk(cand_idx, cand_d2, xb, start, cents, n_cand, impl, block):
+    """One streamed chunk of the candidate pass: top-R centroids of the
+    chunk's rows written into the device-resident (N_pad, R) cache. The
+    cache is donated, so the update is in-place where the backend allows."""
+    idx, d2 = _candidate_pass(xb, cents, n_cand, impl, block)
+    cand_idx = jax.lax.dynamic_update_slice(cand_idx, idx, (start, 0))
+    cand_d2 = jax.lax.dynamic_update_slice(cand_d2, d2, (start, 0))
+    return cand_idx, cand_d2
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_clusters", "capacity", "max_rounds", "n_real")
+)
+def _capacity_rounds_cached(
+    cand_idx, cand_d2, n_clusters, capacity, max_rounds, n_real
+):
+    """The bidding rounds of ``_capacity_rounds_local`` over a candidate
+    cache built elsewhere (the streamed pass) — same round semantics, same
+    carried O(N + K) state. Rows beyond ``n_real`` are chunk padding and
+    never bid."""
+    n = cand_idx.shape[0]
+    cond, body, init = _round_cond_body(
+        lambda free: _bid_from_candidates(cand_idx, cand_d2, free),
+        n,
+        n_real,
+        n_clusters,
+        max_rounds,
+    )
+    init = (init[0], jnp.full((n_clusters,), capacity, jnp.int32), init[2], init[3])
+    assign, free, _, _ = jax.lax.while_loop(cond, body, init)
+    return assign, free
+
+
+def _resolve_spill_dir(cfg: NomadConfig, store) -> str:
+    """Where a streamed build spills the cluster-major ``x_rows`` store.
+
+    Deterministic locations first: ``cfg.checkpoint_dir/x_rows_spill-<tag>``
+    when the fit owns a checkpoint directory, else a sibling of the input
+    store (``<path>.x_rows-<tag>``). The tag hashes the full config + the
+    store path, so a refit with the *same* config overwrites its own spill
+    (whose bytes it reproduces) while a different config — a sweep over
+    seeds, cluster counts, dtypes — gets its own directory and can never
+    corrupt the ``x_rows`` a still-live ``AnnIndex`` references. Only when
+    neither location is writable does it fall back to a fresh system temp
+    dir (beware: /tmp is often RAM-backed tmpfs — point checkpoint_dir at
+    real disk for truly big corpora).
+    """
+    import hashlib
+    import tempfile
+
+    tag = hashlib.sha256(
+        (repr(sorted(dataclasses.asdict(cfg).items())) + str(store.path)).encode()
+    ).hexdigest()[:8]
+    candidates = []
+    if cfg.checkpoint_dir:
+        candidates.append(
+            os.path.join(cfg.checkpoint_dir, "x_rows_spill-" + tag)
+        )
+    if store.path:
+        candidates.append(str(store.path).rstrip("/\\") + ".x_rows-" + tag)
+    for cand in candidates:
+        try:
+            os.makedirs(cand, exist_ok=True)
+            probe = os.path.join(cand, ".write-probe")
+            with open(probe, "w"):
+                pass
+            os.remove(probe)
+            return cand
+        except OSError:
+            continue
+    return tempfile.mkdtemp(prefix="repro-x-rows-")
+
+
+def _spill_sharded_scatter(
+    store, perm: np.ndarray, n_rows: int, dim: int, out_dir: str, dtype: str,
+    chunk_rows: int, rows_per_shard: int = 65536, max_shards: int = 256,
+):
+    """Stream the input store once and scatter ``row i → perm[i]`` into a
+    sharded on-disk store of ``n_rows`` rows — the cluster-major ``x_rows``
+    layout without ever holding it (or the input) in host RAM. Shards are
+    pre-created as writable memmaps; each chunk's rows are grouped by
+    destination shard and written in one fancy-indexed slice per shard.
+    The scatter touches every shard per chunk, so all shard memmaps stay
+    open — ``max_shards`` caps the fd count (shards grow instead) to stay
+    far under default ulimits at any N.
+    """
+    from repro.data.store import (
+        SHARD_PATTERN,
+        ShardedStore,
+        _commit_meta,
+        _disk_dtype,
+        _encode,
+        stream_chunks,
+    )
+
+    os.makedirs(out_dir, exist_ok=True)
+    rows_per_shard = max(rows_per_shard, -(-n_rows // max_shards))
+    rows_per_shard = max(1, min(rows_per_shard, n_rows))
+    n_shards = -(-n_rows // rows_per_shard)
+    shard_rows = [
+        min(rows_per_shard, n_rows - j * rows_per_shard) for j in range(n_shards)
+    ]
+    starts = np.concatenate([[0], np.cumsum(shard_rows)])
+    files, mms = [], []
+    for j in range(n_shards):
+        name = SHARD_PATTERN.format(j)
+        files.append(name)
+        mms.append(
+            np.lib.format.open_memmap(
+                os.path.join(out_dir, name),
+                mode="w+",
+                dtype=_disk_dtype(dtype),
+                shape=(shard_rows[j], dim),
+            )
+        )
+    for s, chunk in stream_chunks(store, chunk_rows):
+        targets = perm[s : s + chunk.shape[0]]
+        order = np.argsort(targets, kind="stable")
+        t_sorted = targets[order]
+        enc = _encode(chunk, dtype)[order]
+        bounds = np.searchsorted(t_sorted, starts)
+        for j in range(n_shards):
+            lo, hi = bounds[j], bounds[j + 1]
+            if lo == hi:
+                continue
+            mms[j][t_sorted[lo:hi] - starts[j]] = enc[lo:hi]
+    for mm in mms:
+        mm.flush()
+    del mms
+    _commit_meta(out_dir, n_rows, dim, dtype, files, shard_rows)
+    return ShardedStore(out_dir)
+
+
+# ---------------------------------------------------------------------------
 # The builder
 # ---------------------------------------------------------------------------
 
@@ -377,13 +526,23 @@ class IndexBuilder:
 
     # -- the one build -------------------------------------------------------
 
-    def build(self, x: np.ndarray) -> AnnIndex:
+    def build(self, x) -> AnnIndex:
+        from repro.data.store import as_store, is_store
+
         cfg = self.cfg
-        n, d = x.shape
+        n, d = x.shape  # ndarray and EmbeddingStore both expose .shape
         K, C = cfg.n_clusters, cfg.cluster_capacity
         if K * C < n:
             raise ValueError(f"capacity {C}×{K} < N={n}; raise capacity_slack")
-        name, mesh = resolve_build_strategy(self.spec, cfg, self.mesh)
+        # a store input — or an explicit cfg.chunk_rows — selects the
+        # out-of-core streamed pipeline; chunking fixes the accumulation
+        # order, so the two containers produce bit-identical indices
+        streamed = is_store(x) or cfg.chunk_rows > 0
+        name, mesh = (
+            ("streamed", None)
+            if streamed
+            else resolve_build_strategy(self.spec, cfg, self.mesh)
+        )
 
         stage_s: dict = {}
         stage_rss: dict = {}
@@ -397,7 +556,10 @@ class IndexBuilder:
             stage_rss[label] = _rss_mb()
 
         t0 = time.time()
-        if name == "local":
+        if name == "streamed":
+            index, stragglers = self._build_streamed(as_store(x), stage)
+            n_shards = 1
+        elif name == "local":
             index, stragglers = self._build_local(x, stage)
             n_shards = 1
         else:
@@ -503,6 +665,113 @@ class IndexBuilder:
             )
 
         return self._finish(x, cents, assign_d, free_d, stage, knn_fn)
+
+    def _build_streamed(self, store, stage):
+        """The out-of-core build: every §3.2 stage consumes the corpus as a
+        double-buffered stream of ``cfg.resolved_chunk_rows()``-row chunks
+        (``repro.data.store.stream_chunks`` → ``data/loader.py``'s
+        ``Prefetcher``), so peak host RSS is O(chunk + K·D) — plus the
+        O(N·k) kNN graph that *is* the product — instead of O(N·D).
+        Device state adds the O(N·R) candidate cache of the capacity
+        assignment (R = ``cfg.build_candidates``; the full (N, D) never
+        lands anywhere). When the input store is disk-backed the permuted
+        cluster-major ``x_rows`` is scattered straight into a disk-backed
+        sharded store (dtype ``cfg.store_dtype``) as the stream passes.
+
+        Chunk boundaries depend only on (N, chunk_rows), never on the
+        store's native shard layout, so a sharded/memmap store and an
+        in-memory array holding the same rows build bit-identical indices.
+        """
+        from repro.data.store import ArrayStore, stream_chunks
+        from repro.index.kmeans import _pad_chunk
+        from repro.kernels import registry
+
+        cfg = self.cfg
+        n, d = store.shape
+        K, C, k = cfg.n_clusters, cfg.cluster_capacity, cfg.n_neighbors
+        chunk = max(1, min(cfg.resolved_chunk_rows(), n))
+        blk = max(1, min(cfg.build_block_rows, chunk))
+        impl = registry.resolve("pairwise", self.impl)
+        key = jax.random.key(cfg.seed)
+
+        with stage("kmeans"):
+            cents = km.kmeans_centroids_streamed(
+                key,
+                store,
+                K,
+                chunk_rows=chunk,
+                n_iters=cfg.kmeans_iters,
+                tol=cfg.kmeans_tol,
+                impl=self.impl,
+                block=cfg.build_block_rows,
+            )
+            jax.block_until_ready(cents)
+
+        with stage("assign"):
+            r = min(cfg.build_candidates, K)
+            n_pad = -(-n // chunk) * chunk
+            cand_idx = jnp.zeros((n_pad, r), jnp.int32)
+            cand_d2 = jnp.full((n_pad, r), jnp.inf, jnp.float32)
+            for s, ch in stream_chunks(store, chunk):
+                xb, _w = _pad_chunk(ch, chunk)
+                cand_idx, cand_d2 = _cand_write_chunk(
+                    cand_idx,
+                    cand_d2,
+                    jnp.asarray(xb),
+                    jnp.int32(s),
+                    cents,
+                    cfg.build_candidates,
+                    impl,
+                    blk,
+                )
+            assign_d, free_d = _capacity_rounds_cached(
+                cand_idx, cand_d2, K, C, cfg.build_max_rounds, n
+            )
+            assign = np.asarray(assign_d)[:n].astype(np.int64)
+            assign, stragglers = _force_place_host(
+                store, np.asarray(cents), assign, np.asarray(free_d).copy()
+            )
+
+        with stage("permute"):
+            perm_d, counts = _permutation_from_assign(
+                jnp.asarray(assign, jnp.int32), K, C
+            )
+            perm = np.asarray(perm_d).astype(np.int64)
+            if store.path is not None:  # disk in → disk out
+                x_rows = _spill_sharded_scatter(
+                    store, perm, K * C, d,
+                    _resolve_spill_dir(cfg, store), cfg.store_dtype, chunk,
+                )
+            else:  # in-memory store: scatter per chunk into one host buffer
+                buf = np.zeros((K * C, d), np.float32)
+                for s, ch in store.iter_chunks(chunk):
+                    buf[perm[s : s + ch.shape[0]]] = ch
+                x_rows = buf
+
+        with stage("knn"):
+            counts_h = np.asarray(counts)
+            kc = max(1, chunk // C)
+            knn_local = np.empty((K, C, k), np.int32)
+            knn_w = np.empty((K, C, k), np.float32)
+            x_rows_store = x_rows if store.path is not None else ArrayStore(x_rows)
+            for s, blk_rows in stream_chunks(x_rows_store, kc * C):
+                c0, nb = s // C, blk_rows.shape[0] // C
+                valid = (
+                    np.arange(C)[None, :] < counts_h[c0 : c0 + nb, None]
+                )
+                idxb, wb = batched_cluster_knn(
+                    jnp.asarray(blk_rows.reshape(nb, C, d)),
+                    jnp.asarray(valid),
+                    k,
+                    self.impl,
+                )
+                knn_local[c0 : c0 + nb] = np.asarray(idxb)
+                knn_w[c0 : c0 + nb] = np.asarray(wb)
+
+        return (
+            self._assemble(store, cents, x_rows, perm, counts, knn_local, knn_w),
+            stragglers,
+        )
 
     def _build_sharded(self, x, mesh, stage):
         from repro.kernels import registry

@@ -288,6 +288,105 @@ def kmeans_fit(
     )
 
 
+def _pad_chunk(chunk: np.ndarray, chunk_rows: int):
+    """Pad a (possibly ragged) host chunk to exactly ``chunk_rows`` rows and
+    return its validity weights — every streamed chunk then hits one fixed
+    (chunk_rows, D) jit trace, and padding never enters a statistic."""
+    c = chunk.shape[0]
+    w = np.zeros((chunk_rows,), np.float32)
+    w[:c] = 1.0
+    if c < chunk_rows:
+        chunk = np.concatenate(
+            [chunk, np.zeros((chunk_rows - c, chunk.shape[1]), chunk.dtype)]
+        )
+    return chunk, w
+
+
+def kmeans_centroids_streamed(
+    key,
+    store,
+    n_clusters: int,
+    *,
+    chunk_rows: int,
+    n_iters: int = 25,
+    tol: float = 1e-4,
+    impl=None,
+    block: int = 16384,
+):
+    """Centroids-only EM over a disk-backed :class:`repro.data.store.
+    EmbeddingStore` — the streamed twin of :func:`kmeans_centroids`.
+
+    Each pass streams the corpus in ``chunk_rows``-row chunks through a
+    double-buffered :func:`repro.data.store.stream_chunks` feed; per chunk
+    one jitted call runs the registry E-step and accumulates the (K, D+1)
+    partial statistics on device, so peak host RSS is O(chunk_rows · D) and
+    device state is O(chunk + K·D). Same LSH init key schedule as the
+    resident scan, and convergence freezes the *pre-update* centroids
+    (matching ``_em_scan``); the one host sync is a ``float(shift)`` per EM
+    pass, amortised over a full pass of the data. Chunk boundaries depend
+    only on (N, chunk_rows), so results are identical for any two stores
+    holding the same rows.
+    """
+    import functools as _ft
+
+    from repro.data.store import stream_chunks
+    from repro.kernels import registry
+
+    resolved = registry.resolve("kmeans_assign", impl)
+    n, d = store.shape
+    chunk_rows = max(1, min(chunk_rows, n))
+    blk = max(1, min(block, chunk_rows))
+
+    b = max(1, int(np.ceil(np.log2(n_clusters))))
+    kh, kf = jax.random.split(key)
+    planes = jax.random.normal(kh, (d, b), jnp.float32)
+    pow2 = (2 ** jnp.arange(b, dtype=jnp.int32))[None, :]
+    n_buckets = 2**b
+
+    @_ft.partial(jax.jit, donate_argnums=(0, 1))
+    def lsh_partial(sums, cnts, xb, w):
+        bits = (xb @ planes) > 0
+        codes = jnp.sum(bits * pow2, axis=1)
+        sums = sums.at[codes].add(xb * w[:, None])
+        cnts = cnts.at[codes].add(w)
+        return sums, cnts
+
+    sums = jnp.zeros((n_buckets, d), jnp.float32)
+    cnts = jnp.zeros((n_buckets,), jnp.float32)
+    for _s, chunk in stream_chunks(store, chunk_rows):
+        xb, w = _pad_chunk(chunk, chunk_rows)
+        sums, cnts = lsh_partial(sums, cnts, jnp.asarray(xb), jnp.asarray(w))
+    order = jnp.argsort(-cnts)
+    top = order[:n_clusters]
+    bucket_cents = sums[top] / jnp.maximum(cnts[top], 1.0)[:, None]
+    fb_rows = np.asarray(jax.random.randint(kf, (n_clusters,), 0, n))
+    fallback = jnp.asarray(store.read_rows(fb_rows), jnp.float32)
+    cents = jnp.where((cnts[top] > 0)[:, None], bucket_cents, fallback)
+
+    @_ft.partial(jax.jit, donate_argnums=(0, 1))
+    def em_partial(sums, cnts, xb, w, cents):
+        a, _ = blocked_assign(xb, cents, resolved, blk)
+        sums = sums.at[a].add(xb * w[:, None])
+        cnts = cnts.at[a].add(w)
+        return sums, cnts
+
+    for _it in range(n_iters):
+        sums = jnp.zeros((n_clusters, d), jnp.float32)
+        cnts = jnp.zeros((n_clusters,), jnp.float32)
+        for _s, chunk in stream_chunks(store, chunk_rows):
+            xb, w = _pad_chunk(chunk, chunk_rows)
+            sums, cnts = em_partial(
+                sums, cnts, jnp.asarray(xb), jnp.asarray(w), cents
+            )
+        new = sums / jnp.maximum(cnts, 1.0)[:, None]
+        new = jnp.where((cnts > 0)[:, None], new, cents)
+        shift = float(jnp.max(jnp.sum(jnp.square(new - cents), -1)))
+        if shift < tol:
+            break  # freeze-on-converge: keep the pre-update centroids
+        cents = new
+    return cents
+
+
 def kmeans_fit_sharded(
     key,
     x_sharded,

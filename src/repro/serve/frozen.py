@@ -84,9 +84,15 @@ class FrozenMap:
             )
         inv = np.full((K * C,), -1, np.int32)
         inv[index.perm] = np.arange(index.n_points, dtype=np.int32)
+        from repro.data.store import is_store
+
+        # a store-backed x_rows (out-of-core build) is materialised here,
+        # explicitly: serving needs the frozen cluster vectors device-
+        # resident; this is the one O(K·C·D) allocation of the serve path
+        x_np = index.x_rows.materialize() if is_store(index.x_rows) else index.x_rows
         return cls(
             theta_rows=theta,
-            x_rows=jnp.asarray(index.x_rows, jnp.float32),
+            x_rows=jnp.asarray(x_np, jnp.float32),
             centroids=jnp.asarray(index.centroids, jnp.float32),
             counts=counts,
             means=local_means(theta, counts, C),

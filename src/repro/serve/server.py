@@ -113,13 +113,23 @@ class MapServer:
         """Query rows consumed per jitted call (all shards together)."""
         return self.microbatch * self.n_shards
 
-    def transform(self, q: np.ndarray, *, seed: int = 0) -> TransformResult:
+    def transform(self, q, *, seed: int = 0) -> TransformResult:
         """Place unseen rows on the frozen map. Deterministic per ``seed``
         (and independent of microbatch size / sharding — RNG is folded per
-        query row)."""
+        query row). ``q`` may be an array or a disk-backed
+        :class:`repro.data.store.EmbeddingStore` (or memmap / store path):
+        store queries are validated per chunk and read one microbatch at a
+        time, so serving a larger-than-RAM query log never materialises it.
+        """
         from repro.core.nomad import prepare_inputs
+        from repro.data.store import is_store
 
-        q = prepare_inputs(q, dim=self.frozen.dim, caller="transform")
+        q = prepare_inputs(
+            q,
+            dim=self.frozen.dim,
+            caller="transform",
+            chunk_rows=self.frozen.cfg.chunk_rows,
+        )
         t0 = time.time()
         nq = q.shape[0]
         B = self.batch_rows
@@ -127,10 +137,10 @@ class MapServer:
         embs, cells, nids, ndist = [], [], [], []
         lat, bloss = [], []
         for s in range(0, max(nq, 1), B):
-            qb = q[s : s + B]
+            qb = q.read(s, min(s + B, nq)) if is_store(q) else q[s : s + B]
             pad = B - qb.shape[0]
             if pad:
-                qb = np.concatenate([qb, np.zeros((pad, q.shape[1]), q.dtype)])
+                qb = np.concatenate([qb, np.zeros((pad, q.shape[1]), qb.dtype)])
             rows = np.arange(s, s + B, dtype=np.int32)
             valid = rows < nq
             tb = time.time()

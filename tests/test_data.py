@@ -2,6 +2,7 @@
 embedding bridge (zoo model → vectors → NOMAD-compatible)."""
 
 import numpy as np
+import pytest
 
 import jax
 
@@ -40,6 +41,58 @@ def test_prefetcher_orders_and_stops():
     steps = [next(pf)[0] for _ in range(5)]
     assert steps == [0, 1, 2, 3, 4]
     pf.close()
+
+
+def test_prefetcher_builds_each_item_once_under_backpressure():
+    """Back-pressure (full queue) must retry only the put — never rebuild
+    the item: for the out-of-core store feed, a rebuild is a disk re-read."""
+    import time
+
+    calls = []
+    pf = Prefetcher(lambda s: calls.append(s) or s * 10, depth=1)
+    time.sleep(0.5)  # queue fills; worker now blocks on put, not on make
+    got = [next(pf)[1] for _ in range(4)]
+    pf.close()
+    assert got == [0, 10, 20, 30]
+    assert sorted(calls).count(0) == 1 and len(calls) == len(set(calls))
+
+
+def test_prefetcher_max_steps_bounds_one_pass():
+    calls = []
+    pf = Prefetcher(lambda s: calls.append(s) or s, depth=2, max_steps=3)
+    steps = [next(pf)[0] for _ in range(3)]
+    pf._thread.join(timeout=2)  # worker exits on its own at max_steps
+    pf.close()
+    assert steps == [0, 1, 2] and calls == [0, 1, 2]
+
+
+def test_prefetcher_surfaces_worker_exception():
+    """A failed read must raise in the consumer, not hang it on a dead
+    worker thread."""
+
+    def make(step):
+        if step == 2:
+            raise ValueError("truncated shard")
+        return step
+
+    pf = Prefetcher(make, depth=2)
+    assert next(pf)[1] == 0 and next(pf)[1] == 1
+    with pytest.raises(ValueError, match="truncated shard"):
+        next(pf)
+    pf.close()
+
+
+def test_stream_chunks_surfaces_read_error(tmp_path):
+    """End-to-end: a shard that no longer matches meta.json fails the
+    streamed pass with the store's error instead of deadlocking."""
+    from repro.data.store import ShardedStore, stream_chunks, write_sharded
+
+    x = np.arange(40, dtype=np.float32).reshape(10, 4)
+    st = write_sharded(x, str(tmp_path / "s"), rows_per_shard=4)
+    np.save(str(tmp_path / "s" / "shard-00001.npy"), np.zeros((2, 4), np.float32))
+    fresh = ShardedStore(str(tmp_path / "s"))
+    with pytest.raises(ValueError, match="does not match"):
+        list(stream_chunks(fresh, 3))
 
 
 def test_embedding_bridge():

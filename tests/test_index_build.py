@@ -6,6 +6,8 @@ bit-equality on a 1-device mesh, build-strategy resolution, FitResult build
 provenance, and the index-cache content fingerprint.
 """
 
+import os
+
 import numpy as np
 import pytest
 
@@ -228,6 +230,99 @@ def test_save_load_roundtrips_fingerprint(data, tmp_path):
     )
     old = load_index(str(tmp_path / "old.npz"))
     assert old.fingerprint == ""
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core: the streamed build ≡ the in-memory build, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def data_store(data, tmp_path_factory):
+    from repro.data.store import write_sharded
+
+    d = tmp_path_factory.mktemp("store")
+    # shard size deliberately not a multiple of chunk_rows (ragged reads)
+    return write_sharded(data, str(d / "corpus"), rows_per_shard=400)
+
+
+@pytest.mark.parametrize("build_strategy", ["local", "sharded", "auto"])
+def test_streamed_build_store_equals_ndarray_bitwise(
+    data, data_store, build_strategy
+):
+    """build(store) ≡ build(ndarray) for every build_strategy: a store
+    input (or an explicit chunk_rows) selects the streamed pipeline, whose
+    chunk schedule depends only on (N, chunk_rows) — never the container
+    or its shard layout."""
+    cfg = CFG.replace(chunk_rows=512, build_strategy=build_strategy)
+    ba = IndexBuilder(cfg, impl="jnp")
+    a = ba.build(data)
+    bb = IndexBuilder(cfg, impl="jnp")
+    b = bb.build(data_store)
+    assert ba.report.strategy == bb.report.strategy == "streamed"
+    for f in ("knn_idx", "knn_w", "counts", "centroids", "perm"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+    np.testing.assert_array_equal(np.asarray(a.x_rows), np.asarray(b.x_rows))
+    assert a.fingerprint == b.fingerprint != ""
+
+
+def test_streamed_build_spills_x_rows_to_disk(data_store):
+    """A disk-backed input produces a disk-backed cluster-major x_rows —
+    the O(N·D) permuted buffer never lands in host RAM."""
+    from repro.data.store import ShardedStore, is_store
+
+    idx = IndexBuilder(CFG.replace(chunk_rows=512), impl="jnp").build(data_store)
+    assert is_store(idx.x_rows) and isinstance(idx.x_rows, ShardedStore)
+    # the spill agrees with the in-memory scatter of the same permutation
+    ref = IndexBuilder(CFG, impl="jnp").build(np.asarray(data_store))
+    rows = np.zeros_like(ref.x_rows)
+    rows[idx.perm] = np.asarray(data_store)
+    np.testing.assert_array_equal(np.asarray(idx.x_rows), rows)
+
+
+def test_streamed_build_chunk_invariance(data):
+    """chunk_rows changes the accumulation order (different centroids are
+    legitimate) but every chunk size must produce a valid index."""
+    for chunk in (257, 1500):
+        idx = IndexBuilder(CFG.replace(chunk_rows=chunk), impl="jnp").build(data)
+        assert len(set(idx.perm.tolist())) == 1500
+        assert idx.valid_mask[idx.perm].all()
+        counts = np.bincount(idx.perm // idx.capacity, minlength=idx.n_clusters)
+        assert (counts <= idx.capacity).all() and counts.sum() == 1500
+
+
+def test_streamed_build_bf16_spill(data, data_store):
+    """store_dtype='bfloat16' halves the x_rows spill on disk; reads upcast
+    to f32, so the index stays valid and x_rows is bf16-close to the f32
+    scatter. Only the stored mantissa is cut — kNN (computed from the f32
+    upcast) remains a legal neighbor graph."""
+    cfg = CFG.replace(chunk_rows=512, store_dtype="bfloat16")
+    idx = IndexBuilder(cfg, impl="jnp").build(data_store)
+    assert idx.x_rows.dtype_name == "bfloat16"
+    rows = np.zeros((idx.n_clusters * idx.capacity, data.shape[1]), np.float32)
+    rows[idx.perm] = data
+    got = np.asarray(idx.x_rows)
+    np.testing.assert_allclose(got, rows, rtol=2**-7, atol=2**-7)
+    assert got.dtype == np.float32
+    with pytest.raises(ValueError, match="store_dtype"):
+        NomadConfig(store_dtype="int8")
+
+
+def test_store_backed_index_save_load_roundtrip(data_store, tmp_path):
+    """A store-backed x_rows is spilled to a .npy sidecar beside the npz
+    cache and loads back as a memmap store — bit-equal, no O(N·D) RAM."""
+    from repro.data.store import MemmapStore, is_store
+
+    idx = IndexBuilder(CFG.replace(chunk_rows=512), impl="jnp").build(data_store)
+    path = str(tmp_path / "index.npz")
+    save_index(idx, path)
+    assert os.path.exists(path + ".x_rows.npy")
+    loaded = load_index(path)
+    assert is_store(loaded.x_rows) and isinstance(loaded.x_rows, MemmapStore)
+    np.testing.assert_array_equal(
+        np.asarray(loaded.x_rows), np.asarray(idx.x_rows)
+    )
+    assert loaded.fingerprint == idx.fingerprint
 
 
 # ---------------------------------------------------------------------------

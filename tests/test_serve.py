@@ -120,6 +120,69 @@ def test_map_server_overrides_do_not_stick(fitted, queries):
 
 
 # ---------------------------------------------------------------------------
+# Out-of-core queries: transform(store) ≡ transform(ndarray)
+# ---------------------------------------------------------------------------
+
+
+def test_transform_store_queries_equal_ndarray(fitted, queries, tmp_path):
+    """Store-backed queries stream one microbatch at a time through the
+    same jitted transform — placements are bit-identical to the in-memory
+    call (per-row math, per-row RNG)."""
+    from repro.data.store import write_sharded
+
+    est, _, _, _, _ = fitted
+    q, _ = queries
+    # shard size not aligned with the microbatch: reads straddle shards
+    qs = write_sharded(q, str(tmp_path / "q"), rows_per_shard=100)
+    a = est.map_server().transform(q, seed=0)
+    b = est.map_server().transform(qs, seed=0)
+    np.testing.assert_array_equal(a.embedding, b.embedding)
+    np.testing.assert_array_equal(a.cells, b.cells)
+    np.testing.assert_array_equal(a.neighbor_ids, b.neighbor_ids)
+    np.testing.assert_array_equal(a.neighbor_dists, b.neighbor_dists)
+    assert b.n_queries == NQ
+
+
+def test_transform_memmap_queries(fitted, queries, tmp_path):
+    from repro.data.store import is_store
+
+    est, _, _, _, _ = fitted
+    q, _ = queries
+    path = str(tmp_path / "q.npy")
+    np.save(path, q)
+    mm = np.load(path, mmap_mode="r")
+    got = est.transform(mm, seed=0)
+    np.testing.assert_array_equal(got, est.transform(q, seed=0))
+    # the gate still validates store-backed queries
+    bad = q.copy()
+    bad[3, 2] = np.inf
+    np.save(path, bad)
+    with pytest.raises(ValueError, match="non-finite"):
+        est.transform(np.load(path, mmap_mode="r"))
+
+
+def test_serve_from_store_built_map(queries, tmp_path):
+    """Fit from a disk-backed corpus (store-backed index), checkpoint it,
+    and serve from the checkpoint — the store-backed x_rows sidecar feeds
+    FrozenMap without the training array."""
+    from repro.data.synthetic import gaussian_mixture_store
+
+    q, _ = queries
+    ckdir = str(tmp_path / "ck")
+    store, _ = gaussian_mixture_store(
+        str(tmp_path / "corpus"), N, DIM, n_components=4, seed=0,
+        rows_per_shard=400,
+    )
+    cfg = CFG.replace(chunk_rows=512, checkpoint_dir=ckdir)
+    est = NomadProjection(cfg)
+    est.fit(store)
+    want = est.transform(q, seed=0)
+    cold = NomadProjection.from_checkpoint(ckdir)
+    got = cold.transform(q, seed=0)  # never saw the corpus
+    np.testing.assert_array_equal(want, got)
+
+
+# ---------------------------------------------------------------------------
 # Checkpoint-loaded serving (no training data)
 # ---------------------------------------------------------------------------
 

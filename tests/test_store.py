@@ -1,0 +1,358 @@
+"""Out-of-core embedding stores (repro.data.store).
+
+Covers: bit-exact round-trips of sharded/memmap stores vs the source array
+across chunk sizes (ragged final chunks, N not divisible by chunk_rows),
+the 0-row shard rejection, bf16 storage, the convert CLI, the chunked
+``prepare_inputs`` gate (no full-size temporary for memmap inputs), the
+container-invariant data fingerprint, and — marked ``slow`` — the RSS
+regression bound of the streamed index build vs the monolithic path.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.nomad import prepare_inputs
+from repro.data.store import (
+    ArrayStore,
+    EmbeddingStore,
+    MemmapStore,
+    ShardedStore,
+    as_store,
+    is_store,
+    stream_chunks,
+    write_sharded,
+)
+from repro.data.synthetic import gaussian_mixture, gaussian_mixture_store
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+N, DIM = 1500, 12
+
+
+@pytest.fixture(scope="module")
+def x():
+    data, _ = gaussian_mixture(N, DIM, n_components=6, seed=5)
+    return data
+
+
+# ---------------------------------------------------------------------------
+# Round-trips: every container must reproduce the source bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows_per_shard", [1, 7, 400, 1500, 4096])
+def test_sharded_store_roundtrips_bitexact(x, tmp_path, rows_per_shard):
+    st_ = write_sharded(x, str(tmp_path / "s"), rows_per_shard=rows_per_shard)
+    assert st_.shape == (N, DIM) and len(st_) == N
+    np.testing.assert_array_equal(st_.materialize(), x)
+
+
+@pytest.mark.parametrize("chunk_rows", [1, 333, 512, 1499, 1500, 9999])
+def test_chunked_reads_cover_ragged_chunks(x, tmp_path, chunk_rows):
+    """Chunk boundaries straddle shard boundaries and N % chunk_rows != 0 —
+    reassembly must still be bit-exact, via both read paths."""
+    st_ = write_sharded(x, str(tmp_path / "s"), rows_per_shard=400)
+    got = [c for s, c in st_.iter_chunks(chunk_rows)]
+    np.testing.assert_array_equal(np.concatenate(got), x)
+    streamed = [c for s, c in stream_chunks(st_, chunk_rows)]
+    np.testing.assert_array_equal(np.concatenate(streamed), x)
+    assert all(c.dtype == np.float32 for c in got)
+
+
+def test_memmap_store_roundtrips_bitexact(x, tmp_path):
+    path = str(tmp_path / "x.npy")
+    np.save(path, x)
+    mm = MemmapStore(path)
+    np.testing.assert_array_equal(mm.materialize(), x)
+    np.testing.assert_array_equal(mm.read(37, 1203), x[37:1203])
+
+
+def test_read_rows_gather(x, tmp_path):
+    st_ = write_sharded(x, str(tmp_path / "s"), rows_per_shard=256)
+    rows = np.array([3, 4, 5, N - 1, 0, 777, 401])
+    np.testing.assert_array_equal(st_.read_rows(rows), x[rows])
+
+
+def test_read_range_validation(x, tmp_path):
+    st_ = write_sharded(x, str(tmp_path / "s"), rows_per_shard=256)
+    with pytest.raises(IndexError):
+        st_.read(0, N + 1)
+    with pytest.raises(IndexError):
+        st_.read(-1, 5)
+    with pytest.raises(ValueError, match="chunk_rows"):
+        list(st_.iter_chunks(0))
+
+
+@given(
+    n=st.integers(min_value=1, max_value=257),
+    rows_per_shard=st.integers(min_value=1, max_value=300),
+    chunk_rows=st.integers(min_value=1, max_value=300),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_roundtrip_any_blocking(n, rows_per_shard, chunk_rows):
+    """Property: any (N, rows_per_shard, chunk_rows) triple round-trips."""
+    import tempfile
+
+    rng = np.random.default_rng(n * 1000 + rows_per_shard)
+    data = rng.normal(0, 1, (n, 5)).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        st_ = write_sharded(data, d + "/s", rows_per_shard=rows_per_shard)
+        got = [c for _s, c in st_.iter_chunks(chunk_rows)]
+        np.testing.assert_array_equal(np.concatenate(got), data)
+
+
+# ---------------------------------------------------------------------------
+# Malformed stores
+# ---------------------------------------------------------------------------
+
+
+def test_zero_row_shard_rejected(x, tmp_path):
+    d = str(tmp_path / "s")
+    write_sharded(x, d, rows_per_shard=400)
+    meta_path = os.path.join(d, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    np.save(os.path.join(d, "shard-junk.npy"), np.zeros((0, DIM), np.float32))
+    meta["shards"].append("shard-junk.npy")
+    meta["shard_rows"].append(0)
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="at least one row"):
+        ShardedStore(d)
+
+
+def test_inconsistent_row_total_rejected(x, tmp_path):
+    d = str(tmp_path / "s")
+    write_sharded(x, d, rows_per_shard=400)
+    meta_path = os.path.join(d, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["n_rows"] = N + 7
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="sum"):
+        ShardedStore(d)
+
+
+def test_write_sharded_rejects_empty_and_ragged_dims(tmp_path):
+    with pytest.raises(ValueError, match="no rows"):
+        write_sharded(np.zeros((0, 4), np.float32), str(tmp_path / "e"))
+    bad = [np.zeros((3, 4), np.float32), np.zeros((3, 5), np.float32)]
+    with pytest.raises(ValueError, match="dim"):
+        write_sharded(iter(bad), str(tmp_path / "r"))
+
+
+# ---------------------------------------------------------------------------
+# Storage dtypes
+# ---------------------------------------------------------------------------
+
+
+def test_bfloat16_store_roundtrip_within_precision(x, tmp_path):
+    st_ = write_sharded(x, str(tmp_path / "bf"), rows_per_shard=512, dtype="bfloat16")
+    assert st_.dtype_name == "bfloat16"
+    got = st_.materialize()
+    assert got.dtype == np.float32
+    # bf16 keeps 8 significand bits: relative error bounded by 2^-8
+    np.testing.assert_allclose(got, x, rtol=2**-7, atol=2**-7)
+    # on-disk footprint is half of f32
+    raw = np.load(str(tmp_path / "bf" / "shard-00000.npy"))
+    assert raw.dtype == np.uint16
+
+
+def test_float16_store_roundtrip(x, tmp_path):
+    st_ = write_sharded(x, str(tmp_path / "f16"), rows_per_shard=512, dtype="float16")
+    np.testing.assert_array_equal(st_.materialize(), x.astype(np.float16).astype(np.float32))
+
+
+def test_raw_void_npy_rejected_with_pointer_to_sharded(tmp_path):
+    import ml_dtypes
+
+    path = str(tmp_path / "bf.npy")
+    np.save(path, np.zeros((4, 3), ml_dtypes.bfloat16))  # degrades to |V2
+    with pytest.raises(ValueError, match="sharded store"):
+        MemmapStore(path)
+
+
+# ---------------------------------------------------------------------------
+# Resolution + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_as_store_dispatch(x, tmp_path):
+    assert as_store(x)._x is x  # ndarray → ArrayStore, zero-copy
+    np.save(str(tmp_path / "x.npy"), x)
+    assert isinstance(as_store(str(tmp_path / "x.npy")), MemmapStore)
+    d = str(tmp_path / "s")
+    write_sharded(x, d, rows_per_shard=512)
+    assert isinstance(as_store(d), ShardedStore)
+    s = as_store(d)
+    assert as_store(s) is s
+    with pytest.raises(TypeError, match="EmbeddingStore"):
+        as_store(42)
+    with pytest.raises(FileNotFoundError, match="meta.json"):
+        as_store(str(tmp_path))  # a directory without meta.json
+    with pytest.raises(ValueError, match=".npy"):
+        as_store(str(tmp_path / "s" / "meta.json"))  # a non-.npy file
+
+
+def test_convert_cli_and_info(x, tmp_path):
+    src = str(tmp_path / "x.npy")
+    np.save(src, x)
+    out = str(tmp_path / "converted")
+    r = subprocess.run(
+        [
+            sys.executable, "-m", "repro.data.store", "convert", src, out,
+            "--rows-per-shard", "300", "--dtype", "bfloat16",
+        ],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        cwd=REPO,
+    )
+    assert r.returncode == 0, r.stderr
+    assert "1500 rows x 12 dims" in r.stdout and "5 shard(s)" in r.stdout
+    st_ = ShardedStore(out)
+    np.testing.assert_allclose(st_.materialize(), x, rtol=2**-7, atol=2**-7)
+    r2 = subprocess.run(
+        [sys.executable, "-m", "repro.data.store", "info", out],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        cwd=REPO,
+    )
+    assert r2.returncode == 0 and "bfloat16" in r2.stdout
+
+
+# ---------------------------------------------------------------------------
+# The prepare_inputs gate: per-chunk validation, no full-size temporaries
+# ---------------------------------------------------------------------------
+
+
+def test_prepare_inputs_store_passthrough_and_validation(x, tmp_path):
+    st_ = write_sharded(x, str(tmp_path / "s"), rows_per_shard=400)
+    out = prepare_inputs(st_, caller="fit")
+    assert out is st_  # a clean store flows through unchanged
+
+    bad = x.copy()
+    bad[1234, 3] = np.nan
+    stb = write_sharded(bad, str(tmp_path / "bad"), rows_per_shard=400)
+    with pytest.raises(ValueError, match="non-finite"):
+        prepare_inputs(stb, caller="fit")
+
+    with pytest.raises(ValueError, match="float64"):
+        prepare_inputs(ArrayStore(x.astype(np.float64)), caller="fit")
+
+    with pytest.raises(ValueError, match="dim 12"):
+        prepare_inputs(st_, dim=99, caller="transform")
+
+
+def test_prepare_inputs_memmap_casts_per_chunk(x, tmp_path, monkeypatch):
+    """The satellite fix: a memmap input must neither be upcast with a
+    full-array astype nor NaN-scanned in one full-size temporary — the
+    gate wraps it into a store and validates chunk_rows rows at a time."""
+    path = str(tmp_path / "x16.npy")
+    np.save(path, x.astype(np.float16))
+    mm = np.load(path, mmap_mode="r")
+    assert isinstance(mm, np.memmap)
+
+    seen = []
+    real_isfinite = np.isfinite
+
+    def spy(a, *args, **kw):
+        seen.append(np.shape(a))
+        return real_isfinite(a, *args, **kw)
+
+    monkeypatch.setattr(np, "isfinite", spy)
+    out = prepare_inputs(mm, caller="fit", chunk_rows=256)
+    assert is_store(out)
+    # every validation temporary was a chunk, never the full (N, D) array
+    assert seen and max(s[0] for s in seen) <= 256 < N
+    # reads cast per chunk to float32
+    chunk = out.read(0, 100)
+    assert chunk.dtype == np.float32
+    np.testing.assert_array_equal(chunk, x[:100].astype(np.float16).astype(np.float32))
+
+
+def test_prepare_inputs_ndarray_unchanged(x):
+    out = prepare_inputs(x, caller="fit")
+    assert isinstance(out, np.ndarray) and not is_store(out)
+    assert out is x  # f32 arrays flow through without a copy
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints are container-invariant
+# ---------------------------------------------------------------------------
+
+
+def test_data_fingerprint_same_for_all_containers(x, tmp_path):
+    from repro.index.ann import data_fingerprint
+
+    st_ = write_sharded(x, str(tmp_path / "s"), rows_per_shard=333)
+    np.save(str(tmp_path / "x.npy"), x)
+    fp = data_fingerprint(x)
+    assert fp == data_fingerprint(st_)
+    assert fp == data_fingerprint(MemmapStore(str(tmp_path / "x.npy")))
+    y = x.copy()
+    y[7, 0] += 1e-3
+    assert data_fingerprint(y) != fp
+
+
+def test_gaussian_mixture_store_matches_monolithic(tmp_path):
+    x, lab = gaussian_mixture(2000, 10, n_components=5, seed=11)
+    st_, lab2 = gaussian_mixture_store(
+        str(tmp_path / "g"), 2000, 10, n_components=5, seed=11,
+        chunk_rows=301, rows_per_shard=512,
+    )
+    np.testing.assert_array_equal(lab, lab2)
+    np.testing.assert_array_equal(st_.materialize(), x)
+
+
+# ---------------------------------------------------------------------------
+# RSS regression: the streamed build must stay under the monolithic path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_streamed_build_rss_below_monolithic(tmp_path):
+    """Runs benchmarks/index_build.py --store-dir at N=50k in a subprocess
+    and asserts the streamed build's peak host RSS (ru_maxrss watermark,
+    sampled before the monolithic build runs in the same process) stays
+    measurably below the monolithic path's.
+
+    The benchmark is launched through a tiny ``python -c`` interposer: on
+    Linux a fork()ed child *inherits the parent's RSS as its initial
+    ru_maxrss* (and the value survives exec), so spawning straight from a
+    multi-GB pytest process would floor both phases at pytest's own RSS
+    and void the comparison. The interposer forks the benchmark from a
+    ~15 MB image instead."""
+    out = str(tmp_path / "bench.json")
+    interpose = (
+        "import subprocess, sys; "
+        "sys.exit(subprocess.run(sys.argv[1:]).returncode)"
+    )
+    r = subprocess.run(
+        [
+            sys.executable, "-c", interpose,
+            sys.executable, "benchmarks/index_build.py",
+            "--n", "50000", "--dim", "256", "--clusters", "128",
+            "--neighbors", "15", "--repeat", "1",
+            "--store-dir", str(tmp_path / "corpus"),
+            "--json", out,
+        ],
+        capture_output=True, text=True, timeout=1800,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        cwd=REPO,
+    )
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    with open(out) as f:
+        res = json.load(f)
+    rss = res["rss_compare"]
+    assert rss["streamed_peak_mb"] > 0 and rss["monolithic_peak_mb"] > 0
+    # "measurably below": the monolithic path allocates several full (N, D)
+    # copies (~50 MB each at this size); demand a clear margin over jitter
+    assert rss["monolithic_peak_mb"] - rss["streamed_peak_mb"] >= 24.0, rss

@@ -283,6 +283,92 @@ def test_pod_axis_autodetected_with_explicit_shard_axes(data):
 
 
 # ---------------------------------------------------------------------------
+# Out-of-core: fit(store) ≡ fit(ndarray), every strategy
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def data_store(data, tmp_path_factory):
+    from repro.data.store import write_sharded
+
+    x, _ = data
+    d = tmp_path_factory.mktemp("fit_store")
+    return write_sharded(x, str(d / "corpus"), rows_per_shard=400)
+
+
+def test_fit_from_store_equals_fit_from_ndarray_local(data, data_store):
+    """The acceptance criterion: NomadProjection.fit on a sharded on-disk
+    store returns a FitResult bit-equal to the in-memory fit. The shared
+    cfg.chunk_rows pins the f32 accumulation order of the streamed build +
+    PCA init, so only the byte source differs."""
+    x, _ = data
+    cfg = CFG.replace(chunk_rows=512)
+    ra = NomadProjection(cfg).fit(x)
+    rb = NomadProjection(cfg).fit(data_store)
+    assert ra.index_build_strategy == rb.index_build_strategy == "streamed"
+    np.testing.assert_array_equal(ra.embedding, rb.embedding)
+    np.testing.assert_allclose(ra.losses, rb.losses, rtol=0)
+    for f in ("knn_idx", "knn_w", "counts", "centroids", "perm"):
+        np.testing.assert_array_equal(
+            getattr(ra.index, f), getattr(rb.index, f), err_msg=f
+        )
+
+
+@pytest.mark.parametrize("build_strategy", ["local", "sharded"])
+def test_fit_from_store_equals_ndarray_every_build_strategy(
+    data, data_store, build_strategy
+):
+    x, _ = data
+    cfg = CFG.replace(
+        n_epochs=2, chunk_rows=512, build_strategy=build_strategy
+    )
+    ra = NomadProjection(cfg).fit(x)
+    rb = NomadProjection(cfg).fit(data_store)
+    np.testing.assert_array_equal(ra.embedding, rb.embedding)
+
+
+def test_fit_from_store_equals_ndarray_sharded_strategy(
+    data, data_store, one_device_mesh
+):
+    x, _ = data
+    cfg = CFG.replace(n_epochs=2, chunk_rows=512)
+    ra = NomadProjection(cfg, strategy="sharded", mesh=one_device_mesh).fit(x)
+    rb = NomadProjection(cfg, strategy="sharded", mesh=one_device_mesh).fit(
+        data_store
+    )
+    assert ra.strategy == rb.strategy == "sharded"
+    np.testing.assert_array_equal(ra.embedding, rb.embedding)
+
+
+def test_fit_from_memmap_streams(data, tmp_path):
+    """An np.memmap input is auto-wrapped into a store: the fit streams it
+    (and matches the same-chunking in-memory fit bit-for-bit)."""
+    x, _ = data
+    path = str(tmp_path / "x.npy")
+    np.save(path, x)
+    mm = np.load(path, mmap_mode="r")
+    cfg = CFG.replace(n_epochs=2, chunk_rows=512)
+    ra = NomadProjection(cfg).fit(mm)
+    rb = NomadProjection(cfg).fit(x)
+    assert ra.index_build_strategy == "streamed"
+    np.testing.assert_array_equal(ra.embedding, rb.embedding)
+
+
+def test_fit_store_checkpoint_resume_and_cache(data_store, tmp_path, data):
+    """The checkpoint/resume path works from a disk-backed corpus: the
+    second fit reuses the store-backed index cache (fingerprint-checked)
+    and reproduces the run bit-for-bit."""
+    cfg = CFG.replace(
+        n_epochs=2, chunk_rows=512, checkpoint_dir=str(tmp_path / "ck")
+    )
+    r1 = NomadProjection(cfg).fit(data_store)
+    assert r1.index_build_strategy == "streamed"
+    r2 = NomadProjection(cfg).fit(data_store, resume=False)
+    assert r2.index_build_strategy == "cache"
+    np.testing.assert_array_equal(r1.embedding, r2.embedding)
+
+
+# ---------------------------------------------------------------------------
 # The unified front end's surface
 # ---------------------------------------------------------------------------
 
