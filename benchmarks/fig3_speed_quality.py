@@ -47,9 +47,13 @@ def run(quick: bool = False):
 
     index = build_index(x, _cfg())
 
+    from repro.kernels import registry
+
     for method in ("nomad", "infonc"):
         for epochs in sweep:
             cfg = _cfg(n_epochs=epochs, n_noise=64, method=method)
+            # which path the fused step took (jnp on CPU, pallas on TPU/GPU)
+            impl = registry.resolve("nomad_step", cfg.resolved_kernel_impl())
             res = NomadProjection(cfg).fit(x, index=index)
             per_epoch = (
                 float(np.mean(res.epoch_times[1:]))
@@ -60,7 +64,7 @@ def run(quick: bool = False):
             rta = random_triplet_accuracy(x, res.embedding, 10_000)
             rows.append(
                 (f"fig3/{method}@{epochs}ep", per_epoch * 1e6,
-                 f"np10={np10:.4f};rta={rta:.4f};epochs={epochs}")
+                 f"np10={np10:.4f};rta={rta:.4f};epochs={epochs};impl={impl}")
             )
     return rows
 

@@ -126,10 +126,13 @@ def make_sharded_epoch_fn(
         cell_means = jax.lax.stop_gradient(cell_means)
 
         def loss_fn(ti, tp, tn):
-            m_tilde = losses.nomad_mean_term(
-                ti, cell_means, cell_w, own_cell, cfg.resolved_kernel_impl()
+            # one fused registry kernel per step (jnp path ≡ the legacy
+            # mean-term + contrastive composition, bit-for-bit)
+            per_head = losses.nomad_step_term(
+                ti, tp, pos_w, tn, neg_w, cell_means, cell_w, own_cell,
+                cfg.resolved_kernel_impl(),
             )
-            return losses.contrastive_loss(ti, tp, pos_w, m_tilde, tn, neg_w)
+            return jnp.mean(per_head)
 
         loss, (g_i, g_pos, g_neg) = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(
             th_i, th_pos, th_neg

@@ -12,11 +12,15 @@ with ``mean_w[b,r] = |M| · p(m∈r)`` for approximated cells r (0 for the
 head's own cell and non-approximated cells) and ``neg_w`` the importance
 weight of each drawn sample (``|M| · p(m∈r) / n_samples_r``).
 
-The hot term M̃ (B × K Cauchy evaluations per step) dispatches through the
-kernel registry (:mod:`repro.kernels.registry`, kernel ``"cauchy_mean"``):
-the fused Pallas path builds the ``|M|·p(m∈r)·[r ≠ own]`` weights
-in-register; the pure jnp path is the oracle. ``impl`` selects per call
-("auto" picks per backend; legacy bools still work).
+The training step no longer composes these passes separately: the WHOLE
+per-head loss (attraction + M̃ + M) dispatches through the kernel registry
+as one fused kernel (``"nomad_step"``, :func:`nomad_step_term`) whose
+Pallas path accumulates the repulsive mass online across K-tiles — the
+(B, k+S) affinity block and the (B, K) mean-term block never materialise
+in HBM. The jnp path is the legacy multi-pass composition, preserved
+bit-equal as the oracle. ``"cauchy_mean"`` (:func:`nomad_mean_term`)
+remains the standalone M̃ kernel for the serve path and the oracle tests.
+``impl`` selects per call ("auto" picks per backend; legacy bools work).
 """
 
 from __future__ import annotations
@@ -45,6 +49,39 @@ def nomad_mean_term(
     from repro.kernels import registry
 
     return registry.dispatch("cauchy_mean", theta_i, means, cell_w, own_cell, impl=impl)
+
+
+def nomad_step_term(
+    theta_i: jax.Array,  # (B, d) head positions
+    theta_pos: jax.Array,  # (B, k, d) positive (kNN) tail positions
+    pos_w: jax.Array,  # (B, k) p(j|i) weights
+    theta_neg: jax.Array,  # (B, S) exact in-cell samples
+    neg_w: jax.Array,  # (B, S) importance weights
+    means: jax.Array,  # (K, d) cell means (stop-gradded by the kernel)
+    cell_w: jax.Array,  # (K,) |M|·p(m∈r) weights
+    own_cell: jax.Array,  # (B,) global cell id per head (excluded from M̃)
+    impl=None,  # registry impl: None/"auto" | "pallas" | "jnp" (bools legacy)
+) -> jax.Array:
+    """The fused per-head step loss (B,) through the registry.
+
+    Pallas = one online-accumulating pass (custom VJP, gradients to θ_i,
+    θ_pos, θ_neg only); jnp = the legacy multi-pass oracle, bit-equal to
+    the pre-fusion ``nomad_mean_term`` + ``contrastive_loss`` composition.
+    """
+    from repro.kernels import registry
+
+    return registry.dispatch(
+        "nomad_step",
+        theta_i,
+        theta_pos,
+        pos_w,
+        theta_neg,
+        neg_w,
+        means,
+        cell_w,
+        own_cell,
+        impl=impl,
+    )
 
 
 def contrastive_loss(
@@ -92,18 +129,24 @@ def nomad_loss(
     theta_neg,  # (B, S, d) samples drawn uniformly from the head's own cell
     n_noise: int,  # |M|
     n_total: int,  # N (support size of ξ per head; self-edges negligible at scale)
-    impl=None,  # registry impl for the M̃ kernel (None/"auto"|"pallas"|"jnp")
+    impl=None,  # registry impl for the fused step kernel (None/"auto"|"pallas"|"jnp")
 ):
     """Eq. 3 with R̃ = all cells except the head's own (the paper's default).
 
     M̃  = |M| Σ_{r≠c(i)} (|r|/N) q(i, μ_r)      — means, stop-gradded
     M   = |M| (|c(i)|/N) mean_s q(i, m_s)      — exact in-cell samples
+
+    The whole per-head term dispatches as ONE fused registry kernel
+    (``"nomad_step"``); its jnp path is the legacy mean-term +
+    contrastive composition, bit-for-bit.
     """
     B, S, _ = theta_neg.shape
     p_cell = counts.astype(jnp.float32) / float(n_total)  # (K,)
     cell_w = float(n_noise) * p_cell  # (K,)
     means = jax.lax.stop_gradient(means)
-    m_tilde = nomad_mean_term(theta_i, means, cell_w, cell_of_i, impl)
     p_own = p_cell[cell_of_i]  # (B,)
     neg_w = jnp.broadcast_to((float(n_noise) * p_own / S)[:, None], (B, S))
-    return contrastive_loss(theta_i, theta_pos, pos_w, m_tilde, theta_neg, neg_w)
+    per_head = nomad_step_term(
+        theta_i, theta_pos, pos_w, theta_neg, neg_w, means, cell_w, cell_of_i, impl
+    )
+    return jnp.mean(per_head)

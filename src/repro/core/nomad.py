@@ -87,6 +87,13 @@ def make_step_fn(
     ``idx`` is a dict of local index arrays; ``state`` carries (means,
     global_counts, lr, key). ``cluster_offset`` maps local cluster ids into
     the global cell numbering (shard s owns cells [off, off + K_local)).
+
+    The NOMAD branch runs the whole per-step loss through the fused
+    ``"nomad_step"`` registry kernel (via :func:`losses.nomad_loss`):
+    distances, Cauchy weights, attraction and the online-accumulated
+    repulsive mass are one tiled pass with a custom VJP on TPU/GPU, and
+    the bit-equal legacy multi-pass composition on CPU (``impl="jnp"``).
+    ``cfg.kernel_impl`` / ``REPRO_KERNELS`` select per run.
     """
     n_total = n_total or cfg.n_points
     B, S, Mn = cfg.batch_size, cfg.n_exact_negatives, cfg.n_noise

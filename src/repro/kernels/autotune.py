@@ -1,16 +1,34 @@
-"""First-call tile-size autotuner with an on-disk winner cache.
+"""First-call tile-size autotuner (v2) with a bucketed, source-keyed cache.
 
-For each (kernel, backend, shape-signature) the tuner times every candidate
+For each (kernel, backend, shape-*bucket*) the tuner times every candidate
 in the spec's small tile grid on synthesized inputs and records the winner:
 
-* in-process  — a dict, so a jitted trace asks at most once per signature;
+* in-process  — a dict, so a jitted trace asks at most once per bucket;
 * on disk     — JSON at ``$REPRO_TUNE_CACHE`` (default
   ``~/.cache/repro/kernel_tune.json``), so winners survive across runs and
   can be shipped with a deployment.
 
+v2 cache semantics:
+
+* **Shape buckets.** Dimensions ≤ 128 key exactly; larger dimensions round
+  up to the next power of two. N = 49k and N = 50k land in the same bucket
+  (65536) and share one sweep — tile winners are a function of tiling
+  regime, not of the exact row count, and per-exact-shape entries made the
+  cache grow without bound on ragged workloads. Sweeps run at the bucketed
+  shape (``pad_minor`` in every kernel makes any shape legal).
+* **Source-hash invalidation.** Each entry records a hash of the kernel
+  package's ``.py`` sources; entries whose hash no longer matches are
+  ignored at load (a kernel edit re-tunes instead of serving stale tiles).
+* **Versioned envelope** ``{"version": 2, "entries": {...}}``. Corrupt,
+  truncated or legacy-v1 files are ignored wholesale and rewritten on the
+  next store; stores are read-modify-write with an atomic replace, so two
+  racing processes each leave a valid file (last writer wins).
+
 The sweep runs *eagerly* on freshly synthesized concrete inputs (from
 ``spec.make_inputs``), which makes it legal to trigger from inside a jit
 trace: tracers only contribute their static shape signature, never data.
+``sweep(..., report=True)`` additionally returns every candidate's wall
+time for the achieved-vs-roofline report in ``benchmarks/kernel_micro.py``.
 
 Enablement policy (``REPRO_AUTOTUNE``): "1" forces tuning on, "0" forces it
 off; unset ⇒ tune only when the Pallas path actually compiles (i.e. not in
@@ -20,8 +38,11 @@ CPU CI silently falls back to the spec's per-backend default tiles.
 
 from __future__ import annotations
 
+import functools
+import hashlib
 import json
 import os
+import sys
 import tempfile
 import time
 from typing import Mapping, Optional
@@ -29,6 +50,8 @@ from typing import Mapping, Optional
 import jax
 
 from repro.kernels.registry import KernelSpec, ShapeSig, backend, interpret_default
+
+CACHE_VERSION = 2
 
 _memory_cache: dict[str, dict] = {}
 _disk_loaded_from: Optional[str] = None
@@ -43,8 +66,54 @@ def cache_path() -> str:
     )
 
 
+# ---------------------------------------------------------------------------
+# Cache keys: shape buckets + kernel-source hash
+# ---------------------------------------------------------------------------
+
+
+def bucket_dim(n: int) -> int:
+    """≤ 128 exact; above, the next power of two (49k and 50k → 65536)."""
+    n = int(n)
+    if n <= 128:
+        return n
+    p = 128
+    while p < n:
+        p *= 2
+    return p
+
+
+def bucket_sig(sig: ShapeSig) -> ShapeSig:
+    """Bucket every dimension of every argument (dtypes key exactly)."""
+    return tuple((tuple(bucket_dim(d) for d in shape), dt) for shape, dt in sig)
+
+
 def cache_key(name: str, back: str, sig: ShapeSig) -> str:
-    return f"{name}|{back}|{sig!r}"
+    return f"{name}|{back}|{bucket_sig(sig)!r}"
+
+
+@functools.lru_cache(maxsize=None)
+def _dir_source_hash(pkg_dir: str) -> str:
+    h = hashlib.sha256()
+    try:
+        for fn in sorted(os.listdir(pkg_dir)):
+            if fn.endswith(".py"):
+                with open(os.path.join(pkg_dir, fn), "rb") as f:
+                    h.update(fn.encode())
+                    h.update(f.read())
+    except OSError:
+        return "unknown"
+    return h.hexdigest()[:16]
+
+
+def source_hash(spec: KernelSpec) -> str:
+    """Hash of the kernel package's ``.py`` sources (cache-entry validity)."""
+    if spec.pallas is None:
+        return "jnp-only"
+    mod = sys.modules.get(spec.pallas.__module__)
+    mod_file = getattr(mod, "__file__", None)
+    if not mod_file:
+        return "unknown"
+    return _dir_source_hash(os.path.dirname(os.path.abspath(mod_file)))
 
 
 def autotune_enabled() -> bool:
@@ -60,7 +129,13 @@ def autotune_enabled() -> bool:
 
 
 def _load_disk() -> None:
-    """Merge the on-disk cache into memory (once per path)."""
+    """Merge valid on-disk entries into memory (once per path).
+
+    Anything unusable — unreadable/corrupt JSON, a legacy v1 flat dict, a
+    foreign version, entries for unregistered kernels, entries whose
+    recorded source hash no longer matches the kernel package — is simply
+    skipped; the next winner store rewrites the file in v2 form.
+    """
     global _disk_loaded_from
     path = cache_path()
     if _disk_loaded_from == path:
@@ -71,12 +146,33 @@ def _load_disk() -> None:
             on_disk = json.load(f)
     except (OSError, ValueError):
         return
-    for k, v in on_disk.items():
+    if not isinstance(on_disk, dict) or on_disk.get("version") != CACHE_VERSION:
+        return
+    entries = on_disk.get("entries")
+    if not isinstance(entries, dict):
+        return
+    from repro.kernels import registry
+
+    for k, v in entries.items():
+        if not isinstance(v, dict) or "tiles" not in v:
+            continue
+        name = str(k).split("|", 1)[0]
+        try:
+            spec = registry.get(name)
+        except KeyError:
+            continue
+        if v.get("src") != source_hash(spec):
+            continue
         _memory_cache.setdefault(k, v)
 
 
 def _store_disk(key: str, entry: dict) -> None:
-    """Read-modify-write with an atomic replace (best-effort on failure)."""
+    """Read-modify-write with an atomic replace (best-effort on failure).
+
+    The per-candidate ``"candidates"`` report never goes to disk — only
+    the winner. A damaged or legacy file is replaced with a fresh v2
+    envelope rather than propagated.
+    """
     path = cache_path()
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
@@ -84,8 +180,14 @@ def _store_disk(key: str, entry: dict) -> None:
             with open(path) as f:
                 on_disk = json.load(f)
         except (OSError, ValueError):
-            on_disk = {}
-        on_disk[key] = entry
+            on_disk = None
+        if (
+            not isinstance(on_disk, dict)
+            or on_disk.get("version") != CACHE_VERSION
+            or not isinstance(on_disk.get("entries"), dict)
+        ):
+            on_disk = {"version": CACHE_VERSION, "entries": {}}
+        on_disk["entries"][key] = {k: v for k, v in entry.items() if k != "candidates"}
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
         with os.fdopen(fd, "w") as f:
             json.dump(on_disk, f, indent=1, sort_keys=True)
@@ -118,10 +220,18 @@ def _time_candidate(spec: KernelSpec, args: tuple, tiles: Mapping[str, int], int
     return best * 1e6
 
 
-def sweep(spec: KernelSpec, sig: ShapeSig, *, interpret: Optional[bool] = None) -> dict:
+def sweep(
+    spec: KernelSpec,
+    sig: ShapeSig,
+    *,
+    interpret: Optional[bool] = None,
+    report: bool = False,
+) -> dict:
     """Time every tile candidate at ``sig``; return the winning entry.
 
     Runs eagerly on synthesized inputs — never touches caller data.
+    ``report=True`` adds a ``"candidates"`` list (every candidate's tiles
+    and wall time) for roofline reporting; it is stripped before disk.
     """
     if interpret is None:
         interpret = interpret_default()
@@ -134,28 +244,39 @@ def sweep(spec: KernelSpec, sig: ShapeSig, *, interpret: Optional[bool] = None) 
             continue
         results.append((us, dict(tiles)))
     if not results:
-        return {"tiles": dict(spec.tiles_for_backend(backend())), "us": None}
-    us, tiles = min(results, key=lambda r: r[0])
-    return {"tiles": tiles, "us": us, "n_candidates": len(results)}
+        entry = {"tiles": dict(spec.tiles_for_backend(backend())), "us": None}
+    else:
+        us, tiles = min(results, key=lambda r: r[0])
+        entry = {"tiles": tiles, "us": us, "n_candidates": len(results)}
+    entry["src"] = source_hash(spec)
+    if report:
+        entry["candidates"] = [{"tiles": t, "us": u} for u, t in results]
+    return entry
 
 
 def record(spec: KernelSpec, sig: ShapeSig, entry: dict) -> None:
     """Store a sweep winner (memory + disk) — e.g. from an explicit
     ``kernel_micro.py --autotune`` run warming the cache for a deployment."""
+    entry = dict(entry)
+    entry.setdefault("src", source_hash(spec))
     key = cache_key(spec.name, backend(), sig)
     _memory_cache[key] = entry
     _store_disk(key, entry)
 
 
 def tiles_for(spec: KernelSpec, sig: ShapeSig) -> Mapping[str, int]:
-    """The dispatcher's entry point: cached winner, else sweep, else defaults."""
+    """The dispatcher's entry point: cached winner, else sweep, else defaults.
+
+    Keys — and sweeps — at the *bucketed* signature, so every shape in a
+    bucket shares one entry and one sweep.
+    """
     back = backend()
     key = cache_key(spec.name, back, sig)
     _load_disk()
     entry = _memory_cache.get(key)
     if entry is None:
         if autotune_enabled():
-            entry = sweep(spec, sig)
+            entry = sweep(spec, bucket_sig(sig))
             if entry.get("us") is not None:  # a failed sweep (every candidate
                 _store_disk(key, entry)  # errored) must not poison the disk
         else:  # cache — retry next process

@@ -111,6 +111,14 @@ def _sig(B, K, d, dt="float32"):
     return (((B, d), dt), ((K, d), dt), ((K,), dt), ((B,), "int32"))
 
 
+def _cost_model(sig):
+    (B, d) = sig[0][0]
+    K = sig[1][0][0]
+    flops = float(B) * K * (3 * d + 4)  # dist² + Cauchy + weighted sum
+    bytes_ = 4.0 * (B * d + K * d + K + 2 * B)
+    return {"flops": flops, "bytes": bytes_}
+
+
 SPEC = registry.register(
     registry.KernelSpec(
         name="cauchy_mean",
@@ -135,5 +143,6 @@ SPEC = registry.register(
         ),
         bench_shapes=_sig(2048, 2048, 2),
         tol=(1e-5, 1e-6),
+        cost_model=_cost_model,
     )
 )

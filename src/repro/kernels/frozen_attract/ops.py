@@ -111,6 +111,14 @@ def _sig(B, k, d, dt="float32"):
     return (((B, d), dt), ((B, k, d), dt), ((B, k), dt), ((B,), dt))
 
 
+def _cost_model(sig):
+    (B, d) = sig[0][0]
+    k = sig[2][0][1]
+    flops = float(B) * k * (3 * d + 12)  # dist² + Cauchy + log terms
+    bytes_ = 4.0 * (B * d + B * k * d + B * k + 2 * B)
+    return {"flops": flops, "bytes": bytes_}
+
+
 SPEC = registry.register(
     registry.KernelSpec(
         name="frozen_attract",
@@ -127,5 +135,6 @@ SPEC = registry.register(
         ),
         bench_shapes=_sig(2048, 15, 2),
         tol=(1e-5, 1e-6),
+        cost_model=_cost_model,
     )
 )

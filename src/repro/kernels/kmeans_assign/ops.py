@@ -85,6 +85,14 @@ def _sig(n, k, d, dt="float32"):
     return (((n, d), dt), ((k, d), dt))
 
 
+def _cost_model(sig):
+    (n, d) = sig[0][0]
+    k = sig[1][0][0]
+    flops = 2.0 * n * k * d + 2.0 * n * k  # dist² + running argmin
+    bytes_ = 4.0 * (n * d + k * d + 2 * n)
+    return {"flops": flops, "bytes": bytes_}
+
+
 SPEC = registry.register(
     registry.KernelSpec(
         name="kmeans_assign",
@@ -110,5 +118,6 @@ SPEC = registry.register(
         bench_shapes=_sig(4096, 256, 128),
         tol=(1e-4, 1e-4),
         oracle_check=_oracle_check,
+        cost_model=_cost_model,
     )
 )

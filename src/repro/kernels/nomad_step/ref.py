@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the fused NOMAD SGD-step loss (Eq. 3–5, per head).
+
+This is the *legacy multi-pass path*, preserved verbatim as the jnp impl
+and the differential oracle: the mean term is the ``cauchy_mean`` oracle,
+the contrastive reduction is the same expression ``losses.contrastive_loss``
+used before the fusion — so ``impl="jnp"`` through the registry is
+bit-equal to the pre-fusion epoch step, and ordinary AD through this
+function is the gradient oracle the fused custom VJP is tested against.
+
+    loss_b = Σ_s pos_w[b,s] · (log(q_pos + m_b) − log q_pos)
+    m_b    = M̃_b + M_b
+    M̃_b   = Σ_r cell_w[r] · [r ≠ own(b)] · q(θ_b, μ_r)   (means stop-gradded)
+    M_b    = Σ_s neg_w[b,s] · q(θ_b, θ_neg[b,s])
+
+Returns the per-head loss (B,); callers take ``jnp.mean``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cauchy_mean.ref import cauchy_weighted_sum_ref
+
+
+def nomad_step_ref(
+    theta_i,  # (B, d) head positions
+    theta_pos,  # (B, k, d) positive (kNN) tail positions
+    pos_w,  # (B, k) p(j|i) weights (0 ⇒ edge absent)
+    theta_neg,  # (B, S, d) exact in-cell negative samples
+    neg_w,  # (B, S) importance weights
+    means,  # (K, d) cell means (stop-gradded here — refreshed by epoch, not AD)
+    cell_w,  # (K,) |M|·p(m∈r) weights (0 at padded / excluded cells)
+    own_cell,  # (B,) global cell id of each head (its mean is excluded from M̃)
+):
+    th = theta_i.astype(jnp.float32)
+    mu = jax.lax.stop_gradient(means.astype(jnp.float32))
+    m_tilde = cauchy_weighted_sum_ref(th, mu, cell_w, own_cell)  # (B,)
+    # identical op sequence to core.cauchy.cauchy + losses.contrastive_loss
+    d2_pos = jnp.sum(jnp.square(th[:, None, :] - theta_pos.astype(jnp.float32)), axis=-1)
+    q_pos = 1.0 / (1.0 + d2_pos)  # (B, k)
+    d2_neg = jnp.sum(jnp.square(th[:, None, :] - theta_neg.astype(jnp.float32)), axis=-1)
+    q_neg = 1.0 / (1.0 + d2_neg)  # (B, S)
+    m_exact = jnp.sum(neg_w.astype(jnp.float32) * q_neg, axis=-1)  # (B,)
+    denom = q_pos + (m_tilde + m_exact)[:, None]
+    per_edge = jnp.log(q_pos) - jnp.log(denom)
+    return -jnp.sum(pos_w.astype(jnp.float32) * per_edge, axis=-1)

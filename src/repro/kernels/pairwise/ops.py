@@ -87,6 +87,14 @@ def _sig(n, m, d, dt="float32"):
     return (((n, d), dt), ((m, d), dt))
 
 
+def _cost_model(sig):
+    (n, d) = sig[0][0]
+    m = sig[1][0][0]
+    flops = 2.0 * n * m * d + 4.0 * n * m  # ‖x‖²+‖y‖²−2xy expansion
+    bytes_ = 4.0 * (n * d + m * d + n * m)
+    return {"flops": flops, "bytes": bytes_}
+
+
 SPEC = registry.register(
     registry.KernelSpec(
         name="pairwise",
@@ -111,5 +119,6 @@ SPEC = registry.register(
         ),
         bench_shapes=_sig(1024, 1024, 256),
         tol=(2e-5, 2e-5),
+        cost_model=_cost_model,
     )
 )

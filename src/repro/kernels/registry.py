@@ -69,6 +69,14 @@ class KernelSpec:
     # optional custom comparison (e.g. argmin ties); signature
     # oracle_check(args, got, want) -> None, raising on mismatch
     oracle_check: Optional[Callable[[tuple, Any, Any], None]] = None
+    # optional analytic cost of ONE forward call at a signature:
+    # cost_model(sig) -> {"flops": float, "bytes": float} — feeds the
+    # roofline columns of benchmarks/kernel_micro.py and the autotuner's
+    # per-candidate achieved-vs-roofline report
+    cost_model: Optional[Callable[[ShapeSig], dict]] = None
+    # dtype grid the parity harness (tests/test_kernel_parity.py) sweeps:
+    # every floating dtype in check_shapes is rewritten to each entry
+    dtype_grid: Tuple[str, ...] = ("float32", "bfloat16")
 
     def tiles_for_backend(self, backend: str) -> Mapping[str, int]:
         return self.default_tiles.get(backend, self.default_tiles[""])
@@ -95,6 +103,7 @@ def _load_builtins() -> None:
     import repro.kernels.cauchy_mean.ops  # noqa: F401
     import repro.kernels.frozen_attract.ops  # noqa: F401
     import repro.kernels.kmeans_assign.ops  # noqa: F401
+    import repro.kernels.nomad_step.ops  # noqa: F401
     import repro.kernels.pairwise.ops  # noqa: F401
 
 

@@ -85,6 +85,31 @@ def roofline_terms(
     )
 
 
+def kernel_roofline(flops: float, bytes_: float, us: float, hw: dict = HW_V5E) -> dict:
+    """Achieved-vs-roofline summary for ONE kernel call.
+
+    Takes an analytic cost (``spec.cost_model(sig)``) and a measured wall
+    time (µs) and returns achieved GFLOP/s and GB/s, their fractions of
+    the hardware peaks, the roofline-bound wall time at those peaks, the
+    achieved fraction of that bound, and which resource bounds the kernel.
+    Feeds the roofline columns of ``benchmarks/kernel_micro.py`` and the
+    autotuner's per-candidate ``--report``.
+    """
+    s = us * 1e-6
+    compute_s = flops / hw["peak_flops"]
+    memory_s = bytes_ / hw["hbm_bw"]
+    roofline_s = max(compute_s, memory_s)
+    return {
+        "gflops": flops / s / 1e9 if s > 0 else 0.0,
+        "gbs": bytes_ / s / 1e9 if s > 0 else 0.0,
+        "frac_peak_flops": (flops / s) / hw["peak_flops"] if s > 0 else 0.0,
+        "frac_peak_bw": (bytes_ / s) / hw["hbm_bw"] if s > 0 else 0.0,
+        "roofline_us": roofline_s * 1e6,
+        "roofline_frac": roofline_s / s if s > 0 else 0.0,
+        "bound": "compute" if compute_s >= memory_s else "memory",
+    }
+
+
 def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
     """Analytic useful FLOPs for one step of this cell."""
     counts = cfg.param_counts()

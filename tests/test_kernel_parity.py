@@ -1,0 +1,92 @@
+"""Registry-wide differential parity harness.
+
+Every Pallas kernel in the registry is validated against its jnp oracle
+over its full ``check_shapes`` grid × its ``dtype_grid`` — in interpret
+mode, so CPU CI exercises the exact kernel bodies Mosaic compiles on TPU.
+
+This file is also the *coverage gate*: the parametrization is built from
+``registry.names()`` at collection time, and module-level asserts fail
+collection outright if a kernel registers without parity coverage —
+
+* no ``check_shapes`` at all (nothing to validate against the oracle), or
+* no *ragged* signature (every dim a multiple of 8), which would leave
+  the padding/masking path (``kernels/padding.py``) untested.
+
+Registering a new kernel therefore automatically enrolls it here; there
+is no opt-in step to forget. jnp-only kernels (``pallas=None``) are
+exempt from Pallas parity but must still declare shapes (their seam tests
+live next to the spec).
+"""
+
+from __future__ import annotations
+
+import jax
+import pytest
+
+from repro.kernels import registry
+
+
+def _is_float_dtype(dt: str) -> bool:
+    return "float" in dt  # float32, float16, bfloat16, float64
+
+
+def _with_dtype(sig, dt):
+    """Rewrite every floating dtype in the signature to ``dt``; integer
+    args (ids, indices) keep theirs."""
+    return tuple((shape, dt if _is_float_dtype(d0) else d0) for shape, d0 in sig)
+
+
+def _is_ragged(sig) -> bool:
+    return any(dim % 8 != 0 for shape, _ in sig for dim in shape)
+
+
+# ---------------------------------------------------------------------------
+# Coverage gate — runs at collection; a bare `registry.register(...)` with
+# missing or lane-aligned-only shapes kills the whole test session loudly.
+# ---------------------------------------------------------------------------
+
+_PARAMS = []
+for _name in registry.names():
+    _spec = registry.get(_name)
+    assert _spec.check_shapes, (
+        f"kernel {_name!r} registered without parity coverage: "
+        "KernelSpec.check_shapes is empty — every kernel must declare the "
+        "shape grid tests/test_kernel_parity.py validates against the oracle"
+    )
+    if _spec.pallas is None:
+        continue  # jnp-only seam: nothing to diff against the oracle yet
+    assert any(_is_ragged(s) for s in _spec.check_shapes), (
+        f"kernel {_name!r} has no ragged check shape (a dim not divisible "
+        "by 8) — the pad/mask path would ship untested; add one to "
+        "KernelSpec.check_shapes"
+    )
+    assert _spec.dtype_grid, f"kernel {_name!r} has an empty dtype_grid"
+    for _i, _sig in enumerate(_spec.check_shapes):
+        for _dt in _spec.dtype_grid:
+            _PARAMS.append(
+                pytest.param(_name, _i, _dt, id=f"{_name}-shape{_i}-{_dt}")
+            )
+
+
+@pytest.mark.parametrize("name,shape_idx,dtype", _PARAMS)
+def test_pallas_matches_oracle(name, shape_idx, dtype):
+    spec = registry.get(name)
+    sig = _with_dtype(spec.check_shapes[shape_idx], dtype)
+    args = spec.make_inputs(jax.random.key(shape_idx), sig)
+    registry.validate(name, args, interpret=True)  # raises on mismatch
+
+
+def test_every_registered_kernel_is_enrolled():
+    """The parametrization spans exactly the Pallas kernels of the registry."""
+    enrolled = {p.values[0] for p in _PARAMS}
+    expected = {n for n in registry.names() if registry.has_pallas(n)}
+    assert enrolled == expected
+
+
+def test_jnp_only_kernels_resolve_to_ref_everywhere(monkeypatch):
+    """The coverage exemption is exactly the pallas=None set — and those
+    kernels must run their ref under every override."""
+    monkeypatch.setenv("REPRO_KERNELS", "pallas")
+    for name in registry.names():
+        if not registry.has_pallas(name):
+            assert registry.resolve(name, "pallas") == "jnp"

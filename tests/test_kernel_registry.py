@@ -199,8 +199,11 @@ def test_autotune_cache_roundtrips_through_disk(tune_env):
     tiles1 = autotune.tiles_for(spec, sig)
 
     on_disk = json.loads(tune_env.read_text())
+    assert on_disk["version"] == autotune.CACHE_VERSION
     key = autotune.cache_key("pairwise", registry.backend(), sig)
-    assert on_disk[key]["tiles"] == dict(tiles1)
+    entry = on_disk["entries"][key]
+    assert entry["tiles"] == dict(tiles1)
+    assert entry["src"] == autotune.source_hash(spec)
 
     # a fresh process (simulated: cleared memory) reloads the disk winner
     autotune.clear_memory_cache()
