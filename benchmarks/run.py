@@ -22,6 +22,7 @@ SUITES = {
     "kernels": "benchmarks.kernel_micro",  # Pallas kernels
     "index_build": "benchmarks.index_build",  # §3.2 device build vs seed host
     "serve": "benchmarks.serve_latency",  # out-of-sample transform latency
+    "service_load": "benchmarks.service_load",  # HTTP-service concurrency gate
 }
 
 

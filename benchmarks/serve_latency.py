@@ -69,21 +69,24 @@ def bench(
         q, _ = gaussian_mixture(
             bs * server.n_shards, dim, n_components=min(12, clusters), seed=seed + 1
         )
+        from repro.serve import TransformResult
+
         server.transform(q, seed=seed)  # warm-up: pays the jit compile
         lats = []
         for r in range(max(1, repeat)):
             res = server.transform(q, seed=seed + r)
             lats.extend(res.batch_latency_s)
-        lats = np.asarray(lats)
-        p50 = float(np.percentile(lats, 50))
-        p99 = float(np.percentile(lats, 99))
+        # pooled across repeats through the shared TransformResult helper —
+        # the same percentile math res.p50_latency_s uses per call
+        p50 = TransformResult.percentile(lats, 50)
+        p99 = TransformResult.percentile(lats, 99)
         out["batch"][str(bs)] = {
             # "wall_s" is the stage-wall key check_regression.py gates on
             "wall_s": p50,
             "p50_s": p50,
             "p99_s": p99,
             "points_per_s": float(len(q) / p50),
-            "n_runs": int(lats.size),
+            "n_runs": len(lats),
             "strategy": server.strategy,
             "n_shards": server.n_shards,
         }

@@ -324,6 +324,15 @@ class NomadConfig:
     transform_steps: int = 24  # frozen NOMAD steps per query batch
     transform_lr: float = 0.0  # 0 => resolved_lr0() / batch_size / n_epochs
 
+    # HTTP service front end (repro.service): the batching engine holds a
+    # partial device batch open at most `service_max_delay_s` waiting for
+    # concurrent /project requests to coalesce into it; the service-level
+    # LRU result cache keeps `service_cache_entries` responses (0 disables
+    # caching). Both are service-layer knobs — the library-call
+    # MapServer.transform path never reads them.
+    service_max_delay_s: float = 0.005
+    service_cache_entries: int = 1024
+
     # kernel dispatch (repro.kernels.registry): "" defers to "auto" — the
     # registry picks per backend (tpu/gpu → pallas, cpu → jnp;
     # REPRO_KERNELS / REPRO_KERNEL_<NAME> env vars override);
@@ -374,6 +383,10 @@ class NomadConfig:
             raise ValueError("serve_microbatch and serve_knn_block must be >= 1")
         if self.transform_steps < 0 or self.transform_lr < 0:
             raise ValueError("transform_steps and transform_lr must be >= 0")
+        if self.service_max_delay_s < 0:
+            raise ValueError("service_max_delay_s must be >= 0")
+        if self.service_cache_entries < 0:
+            raise ValueError("service_cache_entries must be >= 0 (0 disables)")
         if self.use_pallas is not None:
             warnings.warn(
                 "NomadConfig.use_pallas is deprecated; use "

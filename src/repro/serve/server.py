@@ -15,13 +15,30 @@ every microbatch size produces bit-identical placements — a 1-device
 sharded mesh reproduces local exactly (tested), and the frozen state is
 loaded once: ``MapServer(FrozenMap.from_checkpoint(dir))`` serves with no
 access to the training array.
+
+Two entry points:
+
+* :meth:`MapServer.transform` — the library call: one query array in,
+  one :class:`TransformResult` out, internally chunked into fixed
+  ``batch_rows`` device batches.
+* :meth:`MapServer.transform_batch` — the single-batch substrate the
+  service layer's batching engine (``repro.service.batcher``) drives
+  directly: exactly ``batch_rows`` pre-padded rows with *per-row* seeds
+  and local row ids, so one device batch may coalesce rows from many
+  concurrent requests and still return, row for row, the bits a
+  dedicated ``transform`` call would have.
+
+``transform`` is safe to call concurrently from multiple threads: it
+touches only locals and jitted functions (JAX's compilation cache is
+thread-safe), and results are bit-equal to sequential calls (tested).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,12 +53,16 @@ SERVE_AXIS = "serve"
 
 @dataclasses.dataclass
 class TransformResult:
-    """What one ``MapServer.transform`` call returns (FitResult's twin)."""
+    """What one ``MapServer.transform`` call returns (FitResult's twin).
+
+    ``neighbor_ids``/``neighbor_dists`` are ``None`` when the call asked
+    for the ``return_neighbors=False`` placement-only fast path.
+    """
 
     embedding: np.ndarray  # (Nq, out_dim) placements, query order
     cells: np.ndarray  # (Nq,) assigned frozen cluster per query
-    neighbor_ids: np.ndarray  # (Nq, k) original-order ids of frozen kNN (-1 = none)
-    neighbor_dists: np.ndarray  # (Nq, k) ascending high-dim distances (inf = none)
+    neighbor_ids: Optional[np.ndarray]  # (Nq, k) original-order ids (-1 = none)
+    neighbor_dists: Optional[np.ndarray]  # (Nq, k) ascending distances (inf = none)
     # serving provenance
     n_queries: int = 0
     strategy: str = "local"
@@ -51,6 +72,43 @@ class TransformResult:
     wall_time_s: float = 0.0
     batch_latency_s: List[float] = dataclasses.field(default_factory=list)
     batch_loss: List[float] = dataclasses.field(default_factory=list)
+
+    @staticmethod
+    def percentile(values: Sequence[float], pct: float) -> float:
+        """Shared percentile helper (NaN on empty) — the one latency
+        quantile implementation the benchmarks and the service metrics
+        endpoint reuse instead of hand-rolling their own."""
+        arr = np.asarray(list(values), np.float64)
+        if arr.size == 0:
+            return float("nan")
+        return float(np.percentile(arr, pct))
+
+    @property
+    def p50_latency_s(self) -> float:
+        """Median per-batch placement latency of this call."""
+        return self.percentile(self.batch_latency_s, 50.0)
+
+    @property
+    def p99_latency_s(self) -> float:
+        """Tail (p99) per-batch placement latency of this call."""
+        return self.percentile(self.batch_latency_s, 99.0)
+
+
+@dataclasses.dataclass
+class BatchOutput:
+    """One ``transform_batch`` device batch, already on host.
+
+    Arrays keep the full padded ``batch_rows`` length — the caller owns
+    the valid mask and slices out what it needs (the batching engine
+    fans rows back out to several requests).
+    """
+
+    embedding: np.ndarray  # (B, out_dim)
+    cells: np.ndarray  # (B,)
+    neighbor_ids: Optional[np.ndarray]  # (B, k) | None on the fast path
+    neighbor_dists: Optional[np.ndarray]  # (B, k) | None on the fast path
+    loss: float  # final-step mean loss over valid rows (nan if steps == 0)
+    latency_s: float  # dispatch → block_until_ready wall
 
 
 def resolve_serve_strategy(spec: str, mesh: Optional[Mesh] = None):
@@ -98,14 +156,21 @@ class MapServer:
         )
         self.microbatch = microbatch or cfg.serve_microbatch
         self.steps = cfg.transform_steps if steps is None else steps
+        self._lr = lr
         self._fz = frozen_arrays(frozen)
-        self._fn = make_transform_fn(
-            frozen,
+        self._fn = self._make_fn(with_neighbors=True)
+        self._fn_fast = None  # built lazily on first return_neighbors=False call
+        self._fn_lock = threading.Lock()
+
+    def _make_fn(self, *, with_neighbors: bool):
+        return make_transform_fn(
+            self.frozen,
             steps=self.steps,
-            lr=lr,
+            lr=self._lr,
             mesh=self.mesh,
             # a caller-supplied 1-axis mesh keeps its own axis name
             axis=self.mesh.axis_names[0] if self.mesh is not None else SERVE_AXIS,
+            with_neighbors=with_neighbors,
         )
 
     @property
@@ -113,13 +178,79 @@ class MapServer:
         """Query rows consumed per jitted call (all shards together)."""
         return self.microbatch * self.n_shards
 
-    def transform(self, q, *, seed: int = 0) -> TransformResult:
+    def transform_batch(
+        self,
+        qb: np.ndarray,
+        rows: np.ndarray,
+        seeds: np.ndarray,
+        valid: np.ndarray,
+        *,
+        return_neighbors: bool = True,
+    ) -> BatchOutput:
+        """Place exactly one pre-assembled device batch.
+
+        ``qb`` must be ``(batch_rows, dim)`` float32 (already padded),
+        ``rows``/``seeds``/``valid`` per-row int32 / uint32 / bool. Row i
+        is placed with the RNG stream ``fold_in(key(seeds[i]), rows[i])``
+        — so a batch coalescing several requests (each contributing its
+        own seed and its own 0-based row ids) returns bit-for-bit what a
+        dedicated :meth:`transform` per request would have. Pad rows
+        (``valid=False``) only affect the reported loss normalisation,
+        never another row's placement (the loss is a sum of per-row
+        terms, so gradients decouple row by row).
+        """
+        B = self.batch_rows
+        if qb.shape != (B, self.frozen.dim):
+            raise ValueError(
+                f"transform_batch wants exactly ({B}, {self.frozen.dim}) rows "
+                f"(pad the tail), got {qb.shape}"
+            )
+        if return_neighbors:
+            fn = self._fn
+        else:
+            with self._fn_lock:
+                if self._fn_fast is None:
+                    self._fn_fast = self._make_fn(with_neighbors=False)
+            fn = self._fn_fast
+        args = (
+            self._fz,
+            jnp.asarray(qb),
+            jnp.asarray(rows, jnp.int32),
+            jnp.asarray(seeds, jnp.uint32),
+            jnp.asarray(valid),
+        )
+        tb = time.time()
+        if return_neighbors:
+            th, own, ids, dist, sl = fn(*args)
+        else:
+            th, own, sl = fn(*args)
+            ids = dist = None
+        jax.block_until_ready(th)
+        latency = time.time() - tb
+        sl = np.asarray(sl)
+        return BatchOutput(
+            embedding=np.asarray(th),
+            cells=np.asarray(own),
+            neighbor_ids=None if ids is None else np.asarray(ids),
+            neighbor_dists=None if dist is None else np.asarray(dist),
+            loss=float(sl[-1]) if sl.size else float("nan"),
+            latency_s=latency,
+        )
+
+    def transform(
+        self, q, *, seed: int = 0, return_neighbors: bool = True
+    ) -> TransformResult:
         """Place unseen rows on the frozen map. Deterministic per ``seed``
         (and independent of microbatch size / sharding — RNG is folded per
         query row). ``q`` may be an array or a disk-backed
         :class:`repro.data.store.EmbeddingStore` (or memmap / store path):
         store queries are validated per chunk and read one microbatch at a
         time, so serving a larger-than-RAM query log never materialises it.
+
+        ``return_neighbors=False`` skips the neighbor-id/distance outputs
+        (and their host transfers) entirely — the placement-only fast path
+        for service calls; placements and cells are bit-identical to the
+        default (tested).
         """
         from repro.core.nomad import prepare_inputs
         from repro.data.store import is_store
@@ -133,7 +264,6 @@ class MapServer:
         t0 = time.time()
         nq = q.shape[0]
         B = self.batch_rows
-        key = jax.random.key(seed)
         embs, cells, nids, ndist = [], [], [], []
         lat, bloss = [], []
         for s in range(0, max(nq, 1), B):
@@ -142,25 +272,30 @@ class MapServer:
             if pad:
                 qb = np.concatenate([qb, np.zeros((pad, q.shape[1]), qb.dtype)])
             rows = np.arange(s, s + B, dtype=np.int32)
-            valid = rows < nq
-            tb = time.time()
-            th, own, ids, dist, sl = self._fn(
-                self._fz, jnp.asarray(qb), jnp.asarray(rows), jnp.asarray(valid), key
+            out = self.transform_batch(
+                qb,
+                rows,
+                np.full((B,), np.uint32(seed & 0xFFFFFFFF)),
+                rows < nq,
+                return_neighbors=return_neighbors,
             )
-            jax.block_until_ready(th)
-            lat.append(time.time() - tb)
+            lat.append(out.latency_s)
             take = B - pad
-            embs.append(np.asarray(th)[:take])
-            cells.append(np.asarray(own)[:take])
-            nids.append(np.asarray(ids)[:take])
-            ndist.append(np.asarray(dist)[:take])
-            sl = np.asarray(sl)
-            bloss.append(float(sl[-1]) if sl.size else float("nan"))
+            embs.append(out.embedding[:take])
+            cells.append(out.cells[:take])
+            if return_neighbors:
+                nids.append(out.neighbor_ids[:take])
+                ndist.append(out.neighbor_dists[:take])
+            bloss.append(out.loss)
         return TransformResult(
             embedding=np.concatenate(embs).astype(np.float32),
             cells=np.concatenate(cells).astype(np.int64),
-            neighbor_ids=np.concatenate(nids).astype(np.int64),
-            neighbor_dists=np.concatenate(ndist).astype(np.float32),
+            neighbor_ids=(
+                np.concatenate(nids).astype(np.int64) if return_neighbors else None
+            ),
+            neighbor_dists=(
+                np.concatenate(ndist).astype(np.float32) if return_neighbors else None
+            ),
             n_queries=nq,
             strategy=self.strategy,
             n_shards=self.n_shards,

@@ -64,14 +64,27 @@ def make_transform_fn(
     lr: Optional[float] = None,
     mesh=None,
     axis: str = "serve",
+    with_neighbors: bool = True,
 ):
     """Build the jitted batch-transform function for one FrozenMap.
 
-    Returns ``fn(fz_arrays, qx (B, D), rows (B,) int32, valid (B,) bool,
-    key) -> (theta (B, d), own (B,), nb_ids (B, k), nb_dists (B, k),
-    step_losses (steps,))``. With ``mesh`` given, the body runs under
-    ``shard_map`` with queries row-sharded over ``axis`` and the frozen
-    state replicated; B must then divide by the mesh size.
+    Returns ``fn(fz_arrays, qx (B, D), rows (B,) int32, seeds (B,) uint32,
+    valid (B,) bool) -> (theta (B, d), own (B,), nb_ids (B, k),
+    nb_dists (B, k), step_losses (steps,))``. With ``mesh`` given, the
+    body runs under ``shard_map`` with queries row-sharded over ``axis``
+    and the frozen state replicated; B must then divide by the mesh size.
+
+    The RNG stream is ``fold_in(key(seeds[i]), rows[i])`` — folded per
+    row from a *per-row* seed, so one batch may mix rows of several
+    logical requests (each with its own seed and its own local row
+    numbering) and every row still gets exactly the RNG a dedicated
+    ``MapServer.transform(q, seed=...)`` call would have given it. This
+    is what lets the service-layer batching engine coalesce concurrent
+    requests into one device batch bit-identically.
+
+    ``with_neighbors=False`` returns ``(theta, own, step_losses)`` only:
+    jit dead-code-eliminates the neighbor-id unpermute + sqrt and skips
+    two (B, k) host transfers — the placement-only service fast path.
     """
     cfg = fz.cfg
     C = fz.capacity
@@ -92,7 +105,7 @@ def make_transform_fn(
         jnp.float32,
     )
 
-    def body(fza, qx, rows, valid, key):
+    def body(fza, qx, rows, seeds, valid):
         from repro.kernels import registry
 
         # -- 1. assign to a frozen cell -------------------------------------
@@ -126,7 +139,11 @@ def make_transform_fn(
         if sharded:
             n_valid = jax.lax.psum(n_valid, axis)
         # per-row RNG stream: batching/sharding-invariant by construction
-        row_key = jax.vmap(lambda r: jax.random.fold_in(key, r))(rows)
+        # (key(seed) then fold_in(row) — identical bits whether the key is
+        # built host-side from one python int or traced from a seeds row)
+        row_key = jax.vmap(
+            lambda s, r: jax.random.fold_in(jax.random.key(s), r)
+        )(seeds, rows)
 
         def step(theta, t):
             kt = jax.vmap(lambda kk: jax.random.fold_in(kk, t))(row_key)
@@ -159,6 +176,8 @@ def make_transform_fn(
 
         theta, step_losses = jax.lax.scan(step, theta0, jnp.arange(T))
 
+        if not with_neighbors:
+            return theta, own, step_losses
         nb_ids = jnp.where(nb_valid, fza["inv_perm"][nb_row], -1)
         nb_dists = jnp.where(nb_valid, jnp.sqrt(nb_d2), jnp.inf)
         return theta, own, nb_ids, nb_dists, step_losses
@@ -172,11 +191,15 @@ def make_transform_fn(
     fz_specs = jax.tree_util.tree_map(
         lambda a: P(*([None] * a.ndim)), frozen_arrays(fz)
     )
+    if with_neighbors:
+        out_specs = (P(axis, None), P(axis), P(axis, None), P(axis, None), P())
+    else:
+        out_specs = (P(axis, None), P(axis), P())
     sharded_body = shard_map(
         body,
         mesh=mesh,
-        in_specs=(fz_specs, P(axis, None), P(axis), P(axis), P()),
-        out_specs=(P(axis, None), P(axis), P(axis, None), P(axis, None), P()),
+        in_specs=(fz_specs, P(axis, None), P(axis), P(axis), P(axis)),
+        out_specs=out_specs,
         check_rep=False,
     )
     return jax.jit(sharded_body)

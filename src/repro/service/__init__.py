@@ -1,0 +1,51 @@
+"""The map-serving service layer: HTTP front end over ``repro.serve``.
+
+Layering (each piece independently testable, all dependency-free except
+the optional HTTP skin)::
+
+    app.py (FastAPI, [service] extra)      — the network skin
+      └─ core.py   MapService             — validation → cache → batcher
+           ├─ cache.py    ResultCache     — LRU keyed on (map, query,
+           │                                seed, steps) fingerprints
+           ├─ registry.py MapRegistry     — versioned maps, warm + atomic
+           │                                hot swap + drain
+           │    └─ batcher.py Batcher     — coalesces concurrent requests
+           │         └─ repro.serve.MapServer.transform_batch
+           └─ metrics.py ServiceMetrics   — counters + latency windows
+
+The batching engine returns, per request, exactly the bits a dedicated
+``MapServer.transform`` call would (per-row seeds/rows — see
+``batcher.py``); the cache returns them without touching the device; the
+registry swaps maps under load without dropping either.
+"""
+
+from repro.service.batcher import Batcher, BatcherClosed, BatcherStats
+from repro.service.cache import ResultCache, make_key, query_fingerprint
+from repro.service.core import MapService, ProjectOutcome
+from repro.service.metrics import LatencyWindow, ServiceMetrics
+from repro.service.registry import MapHandle, MapRegistry, map_fingerprint
+
+__all__ = [
+    "Batcher",
+    "BatcherClosed",
+    "BatcherStats",
+    "LatencyWindow",
+    "MapHandle",
+    "MapRegistry",
+    "MapService",
+    "ProjectOutcome",
+    "ResultCache",
+    "ServiceMetrics",
+    "create_app",
+    "make_key",
+    "map_fingerprint",
+    "query_fingerprint",
+]
+
+
+def create_app(*args, **kwargs):
+    """Lazy re-export of :func:`repro.service.app.create_app` (keeps the
+    fastapi import out of ``import repro.service`` on bare installs)."""
+    from repro.service.app import create_app as _create_app
+
+    return _create_app(*args, **kwargs)

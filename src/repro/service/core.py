@@ -1,0 +1,185 @@
+"""MapService: the framework-free service core behind every endpoint.
+
+One object ties the three service pieces together —
+
+  request → validation gate → result cache → batching engine → MapServer
+
+— and is what the FastAPI app (``repro.service.app``), the load-test
+benchmark and the tests all drive. Keeping the whole request path out of
+the HTTP layer means the batching/caching/swap semantics are fully
+testable on a bare install (the ``[service]`` extra only adds the network
+skin).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.server import TransformResult
+from repro.service import cache as cache_mod
+from repro.service.batcher import BatcherClosed
+from repro.service.cache import ResultCache
+from repro.service.metrics import ServiceMetrics
+from repro.service.registry import MapHandle, MapRegistry
+
+# a request that raced a retire re-resolves the active map this many times
+SWAP_RETRIES = 8
+
+
+@dataclasses.dataclass
+class ProjectOutcome:
+    """One served ``/project`` request: result + serving provenance."""
+
+    result: TransformResult
+    map_version: str
+    map_fingerprint: str
+    cache_hit: bool
+    wall_s: float
+
+
+class MapService:
+    """Registry + cache + metrics behind one ``project()`` entry point."""
+
+    def __init__(
+        self,
+        registry: Optional[MapRegistry] = None,
+        *,
+        cache_entries: Optional[int] = None,
+        metrics: Optional[ServiceMetrics] = None,
+    ):
+        self.registry = registry if registry is not None else MapRegistry()
+        self.cache = ResultCache(1024 if cache_entries is None else cache_entries)
+        self.metrics = metrics if metrics is not None else ServiceMetrics()
+
+    # -- the request path ------------------------------------------------------
+
+    def project(
+        self,
+        q,
+        *,
+        seed: int = 0,
+        steps: Optional[int] = None,
+        return_neighbors: bool = True,
+        map_version: Optional[str] = None,
+        use_cache: bool = True,
+        timeout: float = 60.0,
+    ) -> ProjectOutcome:
+        """Place query rows on a served map.
+
+        The happy path: resolve the map handle, check the result cache
+        (keyed on map fingerprint × query fingerprint × seed × steps — a
+        hit returns without touching the batcher or the device at all),
+        else go through the batching engine. If a hot swap retires the
+        resolved handle between resolution and submission, the request
+        transparently re-resolves the *current* active map — a swap never
+        drops a request (tested).
+        """
+        from repro.core.nomad import prepare_inputs
+
+        t0 = time.time()
+        self.metrics.inc("project.requests")
+        handle = self.registry.get(map_version)
+        q = prepare_inputs(q, dim=handle.frozen.dim, caller="project")
+        q = np.asarray(q)
+        for attempt in range(SWAP_RETRIES):
+            if steps is not None and steps != handle.server.steps:
+                raise ValueError(
+                    f"map {handle.version!r} serves transform_steps="
+                    f"{handle.server.steps} (compiled in); got steps={steps}. "
+                    "Register a version with the steps you want."
+                )
+            key = cache_mod.make_key(
+                handle.fingerprint, q, seed, handle.server.steps, return_neighbors
+            )
+            if use_cache:
+                hit = self.cache.get(key)
+                if hit is not None:
+                    self.metrics.inc("project.cache_hits")
+                    wall = time.time() - t0
+                    self.metrics.record_latency("project", wall)
+                    return ProjectOutcome(
+                        result=hit,
+                        map_version=handle.version,
+                        map_fingerprint=handle.fingerprint,
+                        cache_hit=True,
+                        wall_s=wall,
+                    )
+            try:
+                result = handle.batcher.project(
+                    q, seed=seed, return_neighbors=return_neighbors, timeout=timeout
+                )
+            except BatcherClosed:
+                # lost the race against a hot swap: the handle we resolved
+                # was retired before our rows made it in — re-resolve. An
+                # explicitly pinned version does not fail over to a
+                # different map behind the caller's back.
+                self.metrics.inc("project.swap_retries")
+                if map_version is not None:
+                    raise
+                handle = self.registry.get(None)
+                continue
+            if use_cache:
+                self.cache.put(key, result)
+            self.metrics.inc("project.served")
+            wall = time.time() - t0
+            self.metrics.record_latency("project", wall)
+            return ProjectOutcome(
+                result=result,
+                map_version=handle.version,
+                map_fingerprint=handle.fingerprint,
+                cache_hit=False,
+                wall_s=wall,
+            )
+        raise RuntimeError(
+            f"request lost the swap race {SWAP_RETRIES} times in a row — "
+            "is something retiring maps in a tight loop?"
+        )
+
+    # -- introspection (the /health, /maps, /metrics bodies) -------------------
+
+    def health(self) -> dict:
+        active = self.registry.active_version
+        return {
+            "status": "ok" if active is not None else "empty",
+            "active_map": active,
+            "n_maps": len(self.registry.versions()),
+        }
+
+    def maps(self) -> dict:
+        return {
+            "active": self.registry.active_version,
+            "maps": self.registry.versions(),
+        }
+
+    def metrics_snapshot(self) -> dict:
+        """Everything ``/metrics`` serves: counters, request-latency
+        percentiles, cache stats, and per-version batcher state (queue
+        depth, batch-fill ratio, device-batch latency percentiles)."""
+        snap = self.metrics.snapshot()
+        snap["cache"] = self.cache.stats()
+        per_map = {}
+        for desc in self.registry.versions():
+            handle = self.registry.get(desc["version"])
+            lat = handle.batcher.recent_batch_latency()
+            per_map[desc["version"]] = {
+                "active": desc["active"],
+                "queue_depth": handle.batcher.queue_depth(),
+                **handle.batcher.stats.as_dict(),
+                "batch_p50_s": TransformResult.percentile(lat, 50.0),
+                "batch_p99_s": TransformResult.percentile(lat, 99.0),
+            }
+        snap["maps"] = per_map
+        snap["active_map"] = self.registry.active_version
+        return snap
+
+    def close(self) -> None:
+        self.registry.close()
+
+
+def handle_for(service: MapService, version: Optional[str] = None) -> MapHandle:
+    """Convenience used by the app layer's error mapping."""
+    return service.registry.get(version)

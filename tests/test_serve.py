@@ -119,6 +119,82 @@ def test_map_server_overrides_do_not_stick(fitted, queries):
     np.testing.assert_array_equal(a, b)
 
 
+def test_concurrent_transform_threads_bit_equal_sequential(fitted, queries):
+    """One MapServer hammered from many threads: no shared-state
+    corruption, every result bit-equal to the sequential call — the
+    correctness substrate the service layer's batching engine stands on."""
+    import threading
+
+    est, _, _, _, _ = fitted
+    q, _ = queries
+    server = est.map_server()
+    seeds = list(range(8))
+    want = {s: server.transform(q[: 64 + 8 * s], seed=s) for s in seeds}
+    got = {}
+    errs = []
+    start = threading.Barrier(len(seeds))
+
+    def go(s):
+        try:
+            start.wait()
+            got[s] = server.transform(q[: 64 + 8 * s], seed=s)
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=go, args=(s,)) for s in seeds]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    for s in seeds:
+        np.testing.assert_array_equal(got[s].embedding, want[s].embedding)
+        np.testing.assert_array_equal(got[s].cells, want[s].cells)
+        np.testing.assert_array_equal(got[s].neighbor_ids, want[s].neighbor_ids)
+        np.testing.assert_array_equal(got[s].neighbor_dists, want[s].neighbor_dists)
+
+
+def test_return_neighbors_false_parity(fitted, queries):
+    """The placement-only fast path skips the neighbor outputs (and their
+    host transfers) but must place bit-identically."""
+    est, _, _, _, _ = fitted
+    q, _ = queries
+    server = est.map_server()
+    full = server.transform(q, seed=0)
+    fast = server.transform(q, seed=0, return_neighbors=False)
+    np.testing.assert_array_equal(fast.embedding, full.embedding)
+    np.testing.assert_array_equal(fast.cells, full.cells)
+    assert fast.neighbor_ids is None and fast.neighbor_dists is None
+    assert full.neighbor_ids is not None  # the default is unchanged
+
+
+def test_transform_result_percentile_helpers():
+    r = TransformResult(
+        embedding=np.zeros((1, 2), np.float32),
+        cells=np.zeros((1,), np.int64),
+        neighbor_ids=None,
+        neighbor_dists=None,
+        batch_latency_s=[0.1 * (i + 1) for i in range(100)],
+    )
+    assert r.p50_latency_s == pytest.approx(
+        float(np.percentile(r.batch_latency_s, 50))
+    )
+    assert r.p99_latency_s == pytest.approx(
+        float(np.percentile(r.batch_latency_s, 99))
+    )
+    assert r.p99_latency_s > r.p50_latency_s
+    # the shared static helper the benchmarks pool latencies through
+    assert TransformResult.percentile([1.0, 2.0, 3.0], 50.0) == 2.0
+    assert np.isnan(TransformResult.percentile([], 50.0))
+    empty = TransformResult(
+        embedding=np.zeros((0, 2), np.float32),
+        cells=np.zeros((0,), np.int64),
+        neighbor_ids=None,
+        neighbor_dists=None,
+    )
+    assert np.isnan(empty.p50_latency_s)
+
+
 # ---------------------------------------------------------------------------
 # Out-of-core queries: transform(store) ≡ transform(ndarray)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,434 @@
+"""The service layer without HTTP: batching engine, result cache, map
+registry, hot swap, metrics.
+
+The acceptance bar this file pins down:
+
+* **coalesced ≡ direct** — any interleaving of concurrent ``project()``
+  requests returns placements bit-identical to one dedicated
+  ``MapServer.transform`` call per request;
+* **cache hits skip device work entirely** — asserted via the batcher's
+  batch counters;
+* **hot map swap never drops or mixes in-flight requests** — every
+  response under a concurrent swap matches a direct transform on the
+  exact map version it reports.
+
+Everything here runs on a bare install — fastapi is never imported (the
+HTTP skin has its own guarded suite in test_service_http.py).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.base import NomadConfig
+from repro.core.nomad import NomadProjection
+from repro.data.synthetic import gaussian_mixture
+from repro.serve import FrozenMap, MapServer, TransformResult
+from repro.service import (
+    Batcher,
+    BatcherClosed,
+    MapRegistry,
+    MapService,
+    ResultCache,
+    make_key,
+    map_fingerprint,
+    query_fingerprint,
+)
+
+N, DIM, MICRO = 600, 8, 32
+
+CFG = NomadConfig(
+    n_points=N,
+    dim=DIM,
+    n_clusters=4,
+    n_neighbors=5,
+    n_noise=8,
+    n_exact_negatives=4,
+    batch_size=128,
+    n_epochs=2,
+    serve_microbatch=MICRO,
+    transform_steps=4,
+    service_max_delay_s=0.003,
+)
+
+
+def _fit(seed: int, ckdir: str = ""):
+    x, _ = gaussian_mixture(N, DIM, n_components=4, seed=seed)
+    est = NomadProjection(CFG.replace(seed=seed, checkpoint_dir=ckdir))
+    est.fit(x)
+    return est
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    return _fit(0)
+
+
+@pytest.fixture(scope="module")
+def fitted_b(tmp_path_factory):
+    """A second, genuinely different map (different seed), checkpointed —
+    the swap target."""
+    ckdir = str(tmp_path_factory.mktemp("svc") / "ck_b")
+    return _fit(1, ckdir), ckdir
+
+
+def queries(n, seed):
+    q, _ = gaussian_mixture(n, DIM, n_components=4, seed=seed)
+    return q
+
+
+# ---------------------------------------------------------------------------
+# Batching engine: coalesced ≡ direct, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def assert_result_equal(got: TransformResult, want: TransformResult):
+    np.testing.assert_array_equal(got.embedding, want.embedding)
+    np.testing.assert_array_equal(got.cells, want.cells)
+    np.testing.assert_array_equal(got.neighbor_ids, want.neighbor_ids)
+    np.testing.assert_array_equal(got.neighbor_dists, want.neighbor_dists)
+
+
+def test_batcher_single_request_equals_direct(fitted):
+    server = fitted.map_server()
+    batcher = Batcher(server, max_delay_s=0.0)
+    q = queries(50, 11)
+    try:
+        got = batcher.project(q, seed=3)
+    finally:
+        batcher.close()
+    assert_result_equal(got, server.transform(q, seed=3))
+    assert got.n_queries == 50 and np.isnan(got.batch_loss).all()
+
+
+def test_batcher_concurrent_requests_bit_equal_direct(fitted):
+    """The tentpole property: concurrent requests of ragged sizes and
+    distinct seeds, interleaved however the worker coalesces them, each
+    return exactly the bits of a dedicated transform call."""
+    server = fitted.map_server()
+    rng = np.random.RandomState(7)
+    sizes = [int(rng.randint(1, 3 * server.batch_rows)) for _ in range(12)]
+    reqs = [(queries(n, 100 + i), 1000 + i) for i, n in enumerate(sizes)]
+    want = [server.transform(q, seed=s) for q, s in reqs]
+
+    batcher = Batcher(server, max_delay_s=0.01)
+    got = [None] * len(reqs)
+    errs = []
+    start = threading.Barrier(len(reqs))
+
+    def go(i):
+        try:
+            start.wait()
+            got[i] = batcher.project(reqs[i][0], seed=reqs[i][1])
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=go, args=(i,)) for i in range(len(reqs))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    batcher.close()
+    assert not errs
+    for g, w in zip(got, want):
+        assert_result_equal(g, w)
+
+
+def test_batcher_coalesces_backlog_into_full_batches(fitted):
+    """Deterministic coalescing: enqueue a backlog with the worker
+    stopped, then start it — the whole backlog must pack into the minimal
+    number of device batches."""
+    server = fitted.map_server()
+    B = server.batch_rows
+    batcher = Batcher(server, max_delay_s=0.5, autostart=False)
+    per_req = B // 4
+    n_req = 8  # 8 × B/4 = 2 full batches
+    reqs = [batcher.submit(queries(per_req, 30 + i), seed=i) for i in range(n_req)]
+    batcher.start()
+    for r in reqs:
+        assert r.done.wait(30.0) and r.error is None
+    batcher.close()
+    assert batcher.stats.n_batches == (n_req * per_req) // B == 2
+    assert batcher.stats.batch_fill == 1.0
+    assert batcher.stats.n_requests == n_req
+
+
+def test_batcher_splits_oversize_requests(fitted):
+    server = fitted.map_server()
+    B = server.batch_rows
+    n = 2 * B + B // 2  # 2.5 batches
+    q = queries(n, 41)
+    batcher = Batcher(server, max_delay_s=0.0)
+    try:
+        got = batcher.project(q, seed=5)
+    finally:
+        batcher.close()
+    assert_result_equal(got, server.transform(q, seed=5))
+    assert len(got.batch_latency_s) >= 3
+
+
+def test_batcher_closed_rejects_and_drains(fitted):
+    server = fitted.map_server()
+    batcher = Batcher(server, max_delay_s=0.2)
+    req = batcher.submit(queries(8, 50), seed=0)
+    batcher.close(drain=True)  # flushes the partial batch immediately
+    assert req.done.is_set() and req.error is None
+    with pytest.raises(BatcherClosed):
+        batcher.submit(queries(4, 51))
+    assert batcher.queue_depth() == 0
+
+
+def test_batcher_return_neighbors_false_matches(fitted):
+    server = fitted.map_server()
+    q = queries(40, 60)
+    batcher = Batcher(server, max_delay_s=0.0)
+    try:
+        got = batcher.project(q, seed=2, return_neighbors=False)
+    finally:
+        batcher.close()
+    want = server.transform(q, seed=2)
+    np.testing.assert_array_equal(got.embedding, want.embedding)
+    np.testing.assert_array_equal(got.cells, want.cells)
+    assert got.neighbor_ids is None and got.neighbor_dists is None
+
+
+# ---------------------------------------------------------------------------
+# Result cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_skips_device_work_entirely(fitted):
+    svc = MapService()
+    handle = svc.registry.add(FrozenMap.from_fit(fitted._fit_result, fitted.cfg))
+    q = queries(20, 70)
+    first = svc.project(q, seed=1)
+    assert not first.cache_hit
+    batches_after_miss = handle.batcher.stats.n_batches
+    second = svc.project(q, seed=1)
+    assert second.cache_hit
+    # the whole point: a hit never reaches the batcher, let alone the device
+    assert handle.batcher.stats.n_batches == batches_after_miss
+    assert second.result is first.result
+    assert svc.metrics.count("project.cache_hits") == 1
+    svc.close()
+
+
+def test_cache_key_sensitivity(fitted):
+    """seed, steps, neighbors flag, map content and query content each
+    produce distinct keys; identical inputs collide (that's the hit)."""
+    fz = FrozenMap.from_fit(fitted._fit_result, fitted.cfg)
+    fp = map_fingerprint(fz)
+    q = queries(10, 80)
+    base = make_key(fp, q, 0, 4, True)
+    assert make_key(fp, q, 0, 4, True) == base
+    assert make_key(fp, q, 1, 4, True) != base
+    assert make_key(fp, q, 0, 5, True) != base
+    assert make_key(fp, q, 0, 4, False) != base
+    assert make_key("other-map", q, 0, 4, True) != base
+    q2 = q.copy()
+    q2[3, 2] += 1e-3
+    assert make_key(fp, q2, 0, 4, True) != base
+    # container/layout-invariant: the fingerprint canonicalises to f32 C-order
+    assert query_fingerprint(np.asfortranarray(q)) == query_fingerprint(q)
+
+
+def test_cache_lru_eviction():
+    cache = ResultCache(capacity=2)
+    r = TransformResult(np.zeros((1, 2)), np.zeros(1), None, None)
+    ka, kb, kc = ("m", "a", 0, 1, True), ("m", "b", 0, 1, True), ("m", "c", 0, 1, True)
+    cache.put(ka, r)
+    cache.put(kb, r)
+    assert cache.get(ka) is r  # touch a → b is now LRU
+    cache.put(kc, r)
+    assert cache.get(kb) is None and cache.get(ka) is r and cache.get(kc) is r
+    assert len(cache) == 2
+    st = cache.stats()
+    assert st["hits"] == 3 and st["misses"] == 1
+
+
+def test_cache_capacity_zero_disables():
+    cache = ResultCache(capacity=0)
+    k = ("m", "q", 0, 1, True)
+    cache.put(k, TransformResult(np.zeros((1, 2)), np.zeros(1), None, None))
+    assert cache.get(k) is None and len(cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# Registry + hot swap
+# ---------------------------------------------------------------------------
+
+
+def test_registry_versioning_and_activation(fitted):
+    reg = MapRegistry()
+    fz = FrozenMap.from_fit(fitted._fit_result, fitted.cfg)
+    h1 = reg.add(fz, warm=False)
+    h2 = reg.add(fz, warm=False, activate=False)
+    assert (h1.version, h2.version) == ("v1", "v2")
+    assert reg.active_version == "v1"
+    assert [d["active"] for d in reg.versions()] == [True, False]
+    reg.activate("v2")
+    assert reg.get().version == "v2"
+    with pytest.raises(KeyError, match="unknown map version"):
+        reg.get("v9")
+    with pytest.raises(ValueError, match="refusing to retire the active"):
+        reg.retire("v2")
+    reg.retire("v1")
+    assert [d["version"] for d in reg.versions()] == ["v2"]
+    with pytest.raises(ValueError, match="already registered"):
+        reg.add(fz, version="v2", warm=False)
+    reg.close()
+    with pytest.raises(RuntimeError, match="no active map"):
+        reg.get()
+
+
+def test_map_fingerprint_is_content_derived(fitted, fitted_b):
+    est_b, _ = fitted_b
+    fz_a = FrozenMap.from_fit(fitted._fit_result, fitted.cfg)
+    fz_b = FrozenMap.from_fit(est_b._fit_result, est_b.cfg)
+    assert map_fingerprint(fz_a) == map_fingerprint(fz_a)
+    assert map_fingerprint(fz_a) != map_fingerprint(fz_b)
+
+
+def test_hot_swap_under_concurrent_load(fitted, fitted_b):
+    """Clients hammer project() while the registry swaps v1 → v2 and
+    retires v1. No request may be dropped, error, or mix maps: every
+    response must be bit-identical to a direct transform on the exact
+    version it claims to have been served by."""
+    est_b, ckdir_b = fitted_b
+    svc = MapService(cache_entries=0)  # every request must hit a device
+    svc.registry.add(
+        FrozenMap.from_fit(fitted._fit_result, fitted.cfg), version="v1"
+    )
+    servers = {"v1": fitted.map_server(), "v2": est_b.map_server()}
+
+    n_threads = 4
+    results = [[] for _ in range(n_threads)]
+    errs = []
+    start = threading.Barrier(n_threads + 1)
+    stop = threading.Event()  # set only after the swap has completed
+
+    def client(t):
+        try:
+            start.wait()
+            i = 0
+            # keep firing until the swap is done, then land two more
+            # requests that must be served by v2
+            tail_after_stop = 0
+            while tail_after_stop < 2 and i < 5000:
+                stopped = stop.is_set()
+                seed = t * 1000 + i
+                q = queries(11 + (7 * t + i) % 40, seed)
+                out = svc.project(q, seed=seed)
+                results[t].append((q, seed, out))
+                i += 1
+                if stopped:
+                    tail_after_stop += 1
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=client, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    start.wait()
+    handle = svc.registry.swap(ckdir_b, version="v2")  # load+warm+activate+retire v1
+    assert handle.version == "v2" and svc.registry.active_version == "v2"
+    stop.set()
+    for t in threads:
+        t.join()
+
+    assert not errs
+    versions_seen = set()
+    for bucket in results:
+        assert len(bucket) >= 2  # every client got all its responses back
+        for q, seed, out in bucket:
+            versions_seen.add(out.map_version)
+            want = servers[out.map_version].transform(q, seed=seed)
+            np.testing.assert_array_equal(out.result.embedding, want.embedding)
+            np.testing.assert_array_equal(out.result.neighbor_ids, want.neighbor_ids)
+        # requests issued after the swap completed were served by v2
+        assert bucket[-1][2].map_version == "v2"
+    assert "v2" in versions_seen
+    assert [d["version"] for d in svc.registry.versions()] == ["v2"]
+    svc.close()
+
+
+def test_swap_retry_on_retired_handle(fitted, fitted_b):
+    """A request that resolved a handle which gets retired before its rows
+    are accepted must transparently fail over to the new active map."""
+    est_b, ckdir_b = fitted_b
+    svc = MapService(cache_entries=0)
+    svc.registry.add(
+        FrozenMap.from_fit(fitted._fit_result, fitted.cfg), version="v1"
+    )
+    h2 = svc.registry.load(ckdir_b, version="v2", activate=True)
+    old = svc.registry.get("v1")
+    svc.registry.retire("v1")
+    # simulate the race: submitting straight to the retired batcher fails …
+    with pytest.raises(BatcherClosed):
+        old.batcher.project(queries(4, 90), seed=0)
+    # … but the service path re-resolves and serves from v2
+    out = svc.project(queries(4, 90), seed=0)
+    assert out.map_version == "v2"
+    # a request pinned to a retired version does not silently fail over
+    with pytest.raises(KeyError, match="unknown map version"):
+        svc.project(queries(4, 91), seed=0, map_version="v1")
+    assert h2.batcher.stats.n_errors == 0
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Service-level plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_service_validation_gate(fitted):
+    svc = MapService()
+    svc.registry.add(FrozenMap.from_fit(fitted._fit_result, fitted.cfg))
+    with pytest.raises(ValueError, match="dim"):
+        svc.project(np.zeros((4, DIM + 1), np.float32))
+    with pytest.raises(ValueError, match="non-finite"):
+        svc.project(np.full((4, DIM), np.nan, np.float32))
+    with pytest.raises(ValueError, match="float64"):
+        svc.project(np.zeros((4, DIM), np.float64))
+    with pytest.raises(ValueError, match="transform_steps"):
+        svc.project(queries(4, 95), steps=CFG.transform_steps + 1)
+    svc.close()
+
+
+def test_metrics_snapshot_shape(fitted):
+    svc = MapService()
+    svc.registry.add(FrozenMap.from_fit(fitted._fit_result, fitted.cfg))
+    q = queries(8, 96)
+    svc.project(q, seed=0)
+    svc.project(q, seed=0)  # hit
+    snap = svc.metrics_snapshot()
+    assert snap["counters"]["project.requests"] == 2
+    assert snap["counters"]["project.cache_hits"] == 1
+    assert snap["cache"]["hits"] == 1 and snap["cache"]["misses"] == 1
+    lat = snap["latency"]["project"]
+    assert lat["count"] == 2 and lat["p50_s"] > 0 and lat["p99_s"] >= lat["p50_s"]
+    (version,) = snap["maps"]
+    per_map = snap["maps"][version]
+    assert per_map["active"] and per_map["queue_depth"] == 0
+    assert per_map["n_batches"] >= 1 and 0 < per_map["batch_fill"] <= 1.0
+    assert per_map["batch_p50_s"] > 0
+    assert snap["active_map"] == version
+    svc.close()
+
+
+def test_service_config_validation():
+    with pytest.raises(ValueError, match="service_max_delay_s"):
+        NomadConfig(service_max_delay_s=-0.1)
+    with pytest.raises(ValueError, match="service_cache_entries"):
+        NomadConfig(service_cache_entries=-1)
+
+
+def test_batcher_reads_config_delay(fitted):
+    cfg_delay = fitted.cfg.service_max_delay_s
+    batcher = Batcher(fitted.map_server())
+    try:
+        assert batcher.max_delay_s == cfg_delay
+    finally:
+        batcher.close()
