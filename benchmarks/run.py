@@ -6,12 +6,20 @@ us_per_call, derived), …]`` and this driver prints the combined CSV.
   PYTHONPATH=src python -m benchmarks.run            # full
   PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized
   PYTHONPATH=src python -m benchmarks.run --only fig3,kernels
+  PYTHONPATH=src python -m benchmarks.run --quick --all --json BENCH_run.json
+
+``--json`` additionally writes one consolidated machine-readable report:
+per-suite wall seconds, the row tuples, and the traceback tail of any
+suite that failed (``--all`` is an explicit alias for the every-suite
+default, so CI invocations read as intent rather than omission).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 import traceback
 
 SUITES = {
@@ -30,23 +38,47 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="", help="comma-separated suite names")
+    ap.add_argument(
+        "--all", action="store_true",
+        help="run every suite (the default; mutually exclusive with --only)",
+    )
+    ap.add_argument(
+        "--json", default="",
+        help="write a consolidated per-suite report (BENCH_run.json)",
+    )
     args = ap.parse_args()
+    if args.all and args.only:
+        ap.error("--all and --only are mutually exclusive")
     only = set(args.only.split(",")) if args.only else set(SUITES)
 
     import importlib
 
     print("name,us_per_call,derived")
     failed = []
+    report: dict = {"benchmark": "run", "quick": bool(args.quick), "suites": {}}
     for key, mod_name in SUITES.items():
         if key not in only:
             continue
+        t0 = time.time()
+        entry: dict = {"module": mod_name}
         try:
             mod = importlib.import_module(mod_name)
+            rows = []
             for name, us, derived in mod.run(quick=args.quick):
                 print(f"{name},{us:.1f},{derived}", flush=True)
+                rows.append({"name": name, "us_per_call": float(us), "derived": derived})
+            entry["rows"] = rows
         except Exception:  # noqa: BLE001 — report and continue the suite
             failed.append(key)
+            entry["error"] = traceback.format_exc(limit=8)
             traceback.print_exc(file=sys.stderr)
+        entry["wall_s"] = round(time.time() - t0, 3)
+        report["suites"][key] = entry
+    report["failed"] = failed
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# report → {args.json}", file=sys.stderr)
     if failed:
         print(f"# FAILED suites: {failed}", file=sys.stderr)
         return 1

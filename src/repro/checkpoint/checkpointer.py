@@ -62,10 +62,18 @@ class Checkpointer:
         n_shards: int = 1,
         keep: int = 3,
         async_save: bool = False,
+        primary: bool = True,
     ):
+        """``primary=False`` turns ``save`` into a no-op: under multi-process
+        ``jax.distributed`` every process holds the full (gathered) state, so
+        only process 0 writes — peers construct the Checkpointer with
+        ``primary=jax.process_index() == 0`` and still restore from the
+        shared directory. The caller owns the cross-process barrier that
+        orders the commit before anyone proceeds."""
         self.dir = directory
         self.n_shards = n_shards
         self.keep = keep
+        self.primary = primary
         self._pool = cf.ThreadPoolExecutor(max_workers=1) if async_save else None
         self._pending: Optional[cf.Future] = None
         os.makedirs(directory, exist_ok=True)
@@ -75,6 +83,8 @@ class Checkpointer:
     def save(self, step: int, tree: dict, *, sharded_keys=(), metadata: Optional[dict] = None):
         """``sharded_keys``: names (flat paths) whose leading axis is split
         into ``n_shards`` row blocks — one block per shard file."""
+        if not self.primary:
+            return
         self.wait()
         arrays = {k: np.asarray(v) for k, v in _flatten(tree)}
         if self._pool is None:

@@ -272,7 +272,11 @@ class NomadConfig:
     # pipeline itself runs. "auto" resolves from jax.devices() like the
     # training strategy; "local" is one device; "sharded" never places the
     # full (N, D) on a single device.
-    build_strategy: str = "auto"  # "auto" | "local" | "sharded"
+    # "distributed" is the multi-process variant of "sharded": the same
+    # collective program over the global mesh, with each process reading
+    # only its own row ranges of the store (jax.distributed runs resolve
+    # to it automatically).
+    build_strategy: str = "auto"  # "auto" | "local" | "sharded" | "distributed"
     build_block_rows: int = 16384  # row block of the E-step / capacity bidding
     build_max_rounds: int = 16  # device bidding rounds before host fallback
     build_candidates: int = 32  # nearest-centroid candidates cached per row
@@ -290,6 +294,10 @@ class NomadConfig:
     # halves the disk/PCIe footprint; accumulation stays float32 on device.
     chunk_rows: int = 0
     store_dtype: str = "float32"  # "float32" | "float16" | "bfloat16"
+    # ceiling on shard *files* a single spill writes (one open fd each
+    # during the scatter pass): spills whose natural layout would exceed
+    # it are re-blocked to coarser shards instead of exhausting fds
+    store_max_shards: int = 256
 
     # loss (paper §3.3)
     n_noise: int = 64  # |M| noise samples per head
@@ -353,10 +361,10 @@ class NomadConfig:
                 f"unknown strategy {self.strategy!r} "
                 "(want 'auto'|'local'|'sharded'|'hierarchical')"
             )
-        if self.build_strategy not in ("auto", "local", "sharded"):
+        if self.build_strategy not in ("auto", "local", "sharded", "distributed"):
             raise ValueError(
                 f"unknown build_strategy {self.build_strategy!r} "
-                "(want 'auto'|'local'|'sharded')"
+                "(want 'auto'|'local'|'sharded'|'distributed')"
             )
         if (
             self.build_block_rows < 1
@@ -369,6 +377,8 @@ class NomadConfig:
             )
         if self.chunk_rows < 0:
             raise ValueError("chunk_rows must be >= 0 (0 = auto)")
+        if self.store_max_shards < 1:
+            raise ValueError("store_max_shards must be >= 1")
         if self.store_dtype not in ("float32", "float16", "bfloat16"):
             raise ValueError(
                 f"unknown store_dtype {self.store_dtype!r} "

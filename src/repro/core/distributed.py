@@ -6,6 +6,13 @@ ANN graph (paper §3.2), so positive forces and exact in-cell negatives
 never leave the device. The only collective in the optimisation loop is
 the per-refresh all-gather of cluster means and (static) counts.
 
+The epoch body is process-agnostic: built over a mesh that spans the
+**global** device pool (``jax.devices()``), its all-gathers/psums cross
+process boundaries under multi-process ``jax.distributed`` with no code
+change — gather/sum over the same per-device shards in the same mesh
+order makes a P-process fit bit-equal to a 1-process fit on the same
+device count (asserted in tests/test_multiprocess.py).
+
 Two exchange modes:
 
 * ``flat``         — the paper: all-gather all K means over every device.

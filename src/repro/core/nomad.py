@@ -209,6 +209,9 @@ class FitResult:
     resumed: bool = False
     checkpoint_dir: str = ""
     checkpoint_epochs: list = dataclasses.field(default_factory=list)
+    # multi-process provenance (jax.distributed; 1/0 single-process)
+    process_count: int = 1
+    process_index: int = 0
 
 
 def _config_digest(cfg: NomadConfig) -> dict:
@@ -430,6 +433,7 @@ class NomadProjection:
             MeansRefreshEvent,
             as_callbacks,
             resolve_strategy,
+            sync_processes,
         )
         from repro.index.ann import (
             data_fingerprint,
@@ -480,8 +484,12 @@ class NomadProjection:
             build_strategy = builder.report.strategy
             build_s = builder.report.total_s
         if index_cache and (cache_stale or not os.path.exists(index_cache)):
-            os.makedirs(ckdir, exist_ok=True)
-            save_index(index, index_cache)
+            # multi-process: every process built the identical index via the
+            # cross-process collectives — one writer, everyone waits for it
+            if jax.process_index() == 0:
+                os.makedirs(ckdir, exist_ok=True)
+                save_index(index, index_cache)
+            sync_processes("index-cache")
 
         # ---- θ: resume from checkpoint > warm start > fresh init --------------
         start_epoch, resumed = 0, False
@@ -520,11 +528,19 @@ class NomadProjection:
         theta = strategy.prepare(cfg, self.method, index, theta0)
 
         ckpt = None
+        multiprocess = jax.process_count() > 1
         if ckdir:
             from repro.checkpoint import Checkpointer
 
+            # multi-process: process 0 writes synchronously and everyone
+            # barriers on the commit — the async writer thread would race
+            # the barrier's collectives
             ckpt = Checkpointer(
-                ckdir, n_shards=strategy.n_shards, keep=3, async_save=True
+                ckdir,
+                n_shards=strategy.n_shards,
+                keep=3,
+                async_save=not multiprocess,
+                primary=jax.process_index() == 0,
             )
         every = max(1, cfg.checkpoint_every_epochs)
 
@@ -548,9 +564,11 @@ class NomadProjection:
                 epoch_times.append(time.time() - te)
 
                 if ckpt is not None and ((e + 1) % every == 0 or e == cfg.n_epochs - 1):
+                    # strategy.fetch is collective: every process gathers the
+                    # full θ even though only the primary writes it
                     ckpt.save(
                         e,
-                        {"theta": np.asarray(theta)},
+                        {"theta": strategy.fetch(theta)},
                         sharded_keys=("theta",),
                         metadata={
                             "epoch": e,
@@ -561,6 +579,9 @@ class NomadProjection:
                             "losses": list(losses_),
                         },
                     )
+                    if multiprocess:
+                        # no process races past a commit its peers rely on
+                        sync_processes(f"ckpt-{e}")
                     checkpoint_epochs.append(e)
                     if events is not None:
                         events.on_checkpoint(
@@ -571,7 +592,7 @@ class NomadProjection:
                         MeansRefreshEvent(e, strategy.refreshes_per_epoch(), strategy.name)
                     )
                     emb_e = (
-                        index.unpermute(np.asarray(theta))
+                        index.unpermute(strategy.fetch(theta))
                         if events.wants_embedding
                         else None
                     )
@@ -584,7 +605,7 @@ class NomadProjection:
             if ckpt is not None:
                 ckpt.wait()  # commit the in-flight save even on interruption
 
-        emb = index.unpermute(np.asarray(theta))
+        emb = index.unpermute(strategy.fetch(theta))
         meta = strategy.describe()
         result = FitResult(
             embedding=emb,
@@ -602,6 +623,8 @@ class NomadProjection:
             resumed=resumed,
             checkpoint_dir=ckdir,
             checkpoint_epochs=checkpoint_epochs,
+            process_count=meta["process_count"],
+            process_index=meta["process_index"],
         )
         self._fit_result = result
         self._frozen = None  # a refit invalidates any cached frozen state

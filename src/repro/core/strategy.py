@@ -169,6 +169,39 @@ def as_callbacks(
 
 
 # ---------------------------------------------------------------------------
+# Multi-process helpers
+# ---------------------------------------------------------------------------
+
+
+def fetch_global(arr) -> np.ndarray:
+    """Device array → host np.ndarray, multi-process safe.
+
+    Single-process (and anything fully addressable) is a plain
+    ``np.asarray``. Under ``jax.distributed`` a sharded array is *not*
+    fully addressable — ``np.asarray`` raises — so the missing shards are
+    gathered from peer processes first (every process gets the full
+    array). Collective: every process must call this together.
+    """
+    if getattr(arr, "is_fully_addressable", True) or getattr(
+        arr, "is_fully_replicated", False
+    ):
+        # fully replicated arrays (e.g. psum outputs) have a complete local
+        # copy on every process — np.asarray reads it without communication
+        return np.asarray(arr)
+    from jax.experimental import multihost_utils
+
+    return np.asarray(multihost_utils.process_allgather(arr, tiled=True))
+
+
+def sync_processes(tag: str = "sync") -> None:
+    """Cross-process barrier; no-op in a single-process runtime."""
+    if jax.process_count() > 1:
+        from jax.experimental import multihost_utils
+
+        multihost_utils.sync_global_devices(tag)
+
+
+# ---------------------------------------------------------------------------
 # Strategies
 # ---------------------------------------------------------------------------
 
@@ -199,12 +232,18 @@ class ExecutionStrategy:
         refresh = self._refresh
         return max(1, -(-steps // refresh))
 
+    def fetch(self, theta) -> np.ndarray:
+        """θ → host array; gathers remote shards under multi-process jax."""
+        return fetch_global(theta)
+
     def describe(self) -> dict:
         return {
             "strategy": self.name,
             "n_shards": self.n_shards,
             "mesh_shape": tuple(self.mesh.shape.values()) if self.mesh else None,
             "mesh_axes": tuple(self.mesh.axis_names) if self.mesh else None,
+            "process_count": jax.process_count(),
+            "process_index": jax.process_index(),
         }
 
 
@@ -374,12 +413,23 @@ def flat_mesh(devs, axis: str) -> Mesh:
     """One flat mesh axis over ``devs`` — the shape shared by the training
     default mesh, the index-build mesh
     (:func:`repro.index.build.resolve_build_strategy`) and the serve mesh
-    (:func:`repro.serve.server.resolve_serve_strategy`)."""
+    (:func:`repro.serve.server.resolve_serve_strategy`).
+
+    ``devs`` must come from the GLOBAL pool (``jax.devices()``), never
+    ``jax.local_devices()`` — under ``jax.distributed`` a mesh built from
+    local devices would silently compute a per-process answer with no
+    cross-process collectives. ``launch/mesh.py:flat_mesh`` wraps this
+    with the global pool filled in."""
     return Mesh(np.asarray(devs).reshape(-1), (axis,))
 
 
 def default_mesh(cfg: NomadConfig, *, hierarchical: bool = False) -> Mesh:
-    """A mesh over (a prefix of) ``jax.devices()`` compatible with K clusters."""
+    """A mesh over (a prefix of) ``jax.devices()`` compatible with K clusters.
+
+    ``jax.devices()`` is the global pool: under ``jax.distributed`` it
+    spans every process, so the default mesh (and the shard_map
+    collectives over it) crosses process boundaries automatically.
+    """
     devs = jax.devices()
     K = cfg.n_clusters
     if hierarchical:
@@ -411,7 +461,10 @@ def resolve_strategy(
     method = method or cfg.method
 
     if spec == "auto":
-        n_dev = len(jax.devices())
+        # GLOBAL device count — under jax.distributed this spans every
+        # process (jax.local_device_count() would wedge each process into
+        # its own single-host strategy with no cross-process collectives)
+        n_dev = jax.device_count()
         if mesh is not None:
             if cfg.hierarchical and "pod" in mesh.axis_names:
                 spec = "hierarchical"
@@ -431,6 +484,14 @@ def resolve_strategy(
             spec = "sharded"
 
     if spec == "local":
+        if jax.process_count() > 1:
+            raise ValueError(
+                f"strategy='local' (method={method!r}) cannot run under "
+                f"multi-process jax.distributed ({jax.process_count()} "
+                "processes): the local loop would compute one independent "
+                "answer per process. Use strategy='sharded' with "
+                "n_clusters divisible by the global device count."
+            )
         return LocalStrategy()
     if spec == "sharded":
         return ShardedStrategy(mesh=mesh, shard_axes=shard_axes, pod_axis=pod_axis)

@@ -195,6 +195,24 @@ class EmbeddingStore:
         for s in range(0, n, chunk_rows):
             yield s, self.read(s, min(s + chunk_rows, n))
 
+    def process_row_range(
+        self, process_index: int, process_count: int
+    ) -> Tuple[int, int]:
+        """The contiguous row range process ``process_index`` of
+        ``process_count`` owns — the balanced split the multi-process
+        pipeline reads through, so no process ever touches all N rows.
+        Ranges are contiguous and in process order: concatenating them in
+        order reproduces the store exactly."""
+        if not (0 <= process_index < process_count):
+            raise ValueError(
+                f"process_index {process_index} outside [0, {process_count})"
+            )
+        n = self.shape[0]
+        base, extra = divmod(n, process_count)
+        start = process_index * base + min(process_index, extra)
+        stop = start + base + (1 if process_index < extra else 0)
+        return start, stop
+
     def materialize(self) -> np.ndarray:
         """The full float32 array — an explicit O(N·D) host allocation."""
         out = np.empty(self.shape, np.float32)
@@ -353,6 +371,20 @@ class ShardedStore(EmbeddingStore):
             return np.ascontiguousarray(parts[0])
         return np.concatenate(parts, axis=0)
 
+    def assigned_shards(
+        self, process_index: int, process_count: int
+    ) -> list:
+        """Shard-file indices overlapping this process's
+        :meth:`process_row_range` — which files a process actually opens
+        when it streams its range (boundary shards may be shared with a
+        neighbour process)."""
+        start, stop = self.process_row_range(process_index, process_count)
+        if start == stop:
+            return []
+        i0 = int(np.searchsorted(self._starts, start, side="right")) - 1
+        i1 = int(np.searchsorted(self._starts, stop, side="left")) - 1
+        return list(range(i0, i1 + 1))
+
 
 # ---------------------------------------------------------------------------
 # Writing
@@ -374,13 +406,48 @@ def _chunk_source(
             yield np.asarray(chunk)
 
 
+def sharded_grid(n_rows: int, rows_per_shard: int) -> Tuple[list, list]:
+    """The canonical ``(files, shard_rows)`` layout of an ``n_rows`` store
+    re-blocked at ``rows_per_shard`` — full shards plus one ragged tail.
+    Writers that split the row space across processes all agree on this
+    grid, so process 0 can commit ``meta.json`` for shards it never wrote."""
+    files, shard_rows = [], []
+    for i, s in enumerate(range(0, n_rows, rows_per_shard)):
+        files.append(SHARD_PATTERN.format(i))
+        shard_rows.append(min(rows_per_shard, n_rows - s))
+    return files, shard_rows
+
+
+def commit_sharded_meta(
+    out_dir: str, n_rows: int, dim: int, *, rows_per_shard: int, dtype: str = "float32"
+) -> ShardedStore:
+    """Commit ``meta.json`` for a store whose shards were written by
+    :func:`write_sharded` calls with ``commit=False`` (one per process).
+    Call on exactly one process (process 0), after a barrier has ordered
+    every peer's shard writes before it."""
+    _check_store_dtype(dtype)
+    files, shard_rows = sharded_grid(n_rows, rows_per_shard)
+    missing = [f for f in files if not os.path.exists(os.path.join(out_dir, f))]
+    if missing:
+        raise FileNotFoundError(
+            f"commit_sharded_meta({out_dir}): {len(missing)} shard file(s) "
+            f"missing (first: {missing[0]}) — did every writer process "
+            "finish before the commit?"
+        )
+    _commit_meta(out_dir, n_rows, dim, dtype, files, shard_rows)
+    return ShardedStore(out_dir)
+
+
 def write_sharded(
     source: Union[np.ndarray, EmbeddingStore, Iterable[np.ndarray]],
     out_dir: str,
     *,
     rows_per_shard: int = 65536,
     dtype: str = "float32",
-) -> ShardedStore:
+    row_offset: int = 0,
+    total_rows: Optional[int] = None,
+    commit: bool = True,
+) -> Optional[ShardedStore]:
     """Stream ``source`` into a sharded store at ``out_dir``.
 
     ``source`` may be an array, another store, or an iterable of 2-D row
@@ -388,12 +455,29 @@ def write_sharded(
     exactly ``rows_per_shard`` per shard (ragged final shard), encoded to
     ``dtype``, and ``meta.json`` is committed last — a crashed convert
     never leaves a directory that parses as a store.
+
+    Multi-process writes: with ``total_rows`` set, ``source`` covers only
+    rows ``[row_offset, row_offset + len(source))`` of a ``total_rows``
+    store whose other row ranges peer processes write concurrently.
+    ``row_offset`` must land on a shard boundary (``rows_per_shard |
+    row_offset``) so no shard file has two writers. Pass ``commit=False``
+    on every process (returns ``None``), barrier, then have process 0
+    alone call :func:`commit_sharded_meta` — the meta commit is the
+    single atomic publish point, exactly as in the single-writer case.
     """
     _check_store_dtype(dtype)
     if rows_per_shard < 1:
         raise ValueError("rows_per_shard must be >= 1")
+    if total_rows is None and row_offset:
+        raise ValueError("row_offset needs total_rows (a multi-writer store)")
+    if row_offset % rows_per_shard:
+        raise ValueError(
+            f"row_offset {row_offset} is not a multiple of rows_per_shard "
+            f"{rows_per_shard} — a shard file would need two writers"
+        )
     os.makedirs(out_dir, exist_ok=True)
 
+    shard_base = row_offset // rows_per_shard
     files, shard_rows = [], []
     dim = None
     pending: list = []
@@ -403,13 +487,14 @@ def write_sharded(
         nonlocal pending, pending_rows
         block = pending[0] if len(pending) == 1 else np.concatenate(pending)
         take, rest = block[:buf_rows], block[buf_rows:]
-        name = SHARD_PATTERN.format(len(files))
+        name = SHARD_PATTERN.format(shard_base + len(files))
         np.save(os.path.join(out_dir, name), _encode(take, dtype))
         files.append(name)
         shard_rows.append(int(take.shape[0]))
         pending = [rest] if rest.shape[0] else []
         pending_rows = int(rest.shape[0])
 
+    written = 0
     for chunk in _chunk_source(source, rows_per_shard):
         if chunk.ndim != 2:
             raise ValueError(f"source chunk has shape {chunk.shape}, want 2-D")
@@ -423,6 +508,7 @@ def write_sharded(
             chunk = chunk.astype(np.float32)  # per-chunk, never full-array
         pending.append(chunk)
         pending_rows += int(chunk.shape[0])
+        written += int(chunk.shape[0])
         while pending_rows >= rows_per_shard:
             flush(rows_per_shard)
     if pending_rows:
@@ -430,7 +516,29 @@ def write_sharded(
     if not files:
         raise ValueError("write_sharded: source produced no rows")
 
-    _commit_meta(out_dir, sum(shard_rows), dim, dtype, files, shard_rows)
+    if total_rows is not None:
+        end = row_offset + written
+        if end > total_rows:
+            raise ValueError(
+                f"write_sharded: rows [{row_offset}, {end}) overflow "
+                f"total_rows={total_rows}"
+            )
+        if end != total_rows and written % rows_per_shard:
+            raise ValueError(
+                f"write_sharded: range [{row_offset}, {end}) ends mid-shard "
+                f"({written} rows, rows_per_shard={rows_per_shard}) but is "
+                "not the final range — the next writer's shard would have "
+                "two owners"
+            )
+    if not commit:
+        return None
+    n_rows = total_rows if total_rows is not None else sum(shard_rows)
+    if total_rows is not None and (row_offset or written != total_rows):
+        raise ValueError(
+            "write_sharded(commit=True) with a partial row range — peers "
+            "own the other shards; use commit=False + commit_sharded_meta"
+        )
+    _commit_meta(out_dir, n_rows, dim, dtype, files, shard_rows)
     return ShardedStore(out_dir)
 
 
@@ -554,6 +662,13 @@ def _main(argv=None) -> int:
     print(f"{kind}: {st.n_rows} rows x {st.dim} dims, dtype {st.dtype_name}")
     if isinstance(st, ShardedStore):
         print(f"shards: {len(st._files)} (rows per shard: {st._rows.tolist()})")
+        from repro.configs.base import NomadConfig
+
+        cap = NomadConfig().store_max_shards
+        print(
+            f"spill fd cap: {cap} shards (NomadConfig.store_max_shards; "
+            "index-build spills re-block above it)"
+        )
     return 0
 
 

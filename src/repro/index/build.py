@@ -375,7 +375,9 @@ def _resolve_spill_dir(cfg: NomadConfig, store) -> str:
     for cand in candidates:
         try:
             os.makedirs(cand, exist_ok=True)
-            probe = os.path.join(cand, ".write-probe")
+            # per-process probe name: concurrent jax.distributed processes
+            # probe the same candidate dir and must not race each other
+            probe = os.path.join(cand, f".write-probe-{os.getpid()}")
             with open(probe, "w"):
                 pass
             os.remove(probe)
@@ -477,24 +479,39 @@ def _rss_mb() -> float:
 def resolve_build_strategy(
     spec: str, cfg: NomadConfig, mesh: Optional[Mesh] = None
 ):
-    """``"auto"|"local"|"sharded"`` → ("local", None) | ("sharded", Mesh).
+    """``"auto"|"local"|"sharded"|"distributed"`` →
+    ("local", None) | ("sharded"|"distributed", Mesh).
 
     The build mesh is one flat axis over the largest cluster-divisible
     prefix of the available devices (the training mesh's devices when the
-    estimator passes one in, else ``jax.devices()``); ``"auto"`` picks
-    sharded exactly when that mesh is wider than one device.
+    estimator passes one in, else ``jax.devices()`` — the **global** pool
+    under ``jax.distributed``); ``"auto"`` picks sharded exactly when that
+    mesh is wider than one device. ``"distributed"`` runs the same
+    collective program but reads/places rows per process; under multiple
+    processes every global device must participate, so ``n_clusters`` must
+    divide evenly (a truncated mesh would orphan some process's devices).
     """
     from repro.core.strategy import flat_mesh, largest_divisor_leq
 
     spec = spec or "auto"
-    if spec not in ("auto", "local", "sharded"):
+    if spec not in ("auto", "local", "sharded", "distributed"):
         raise ValueError(
-            f"unknown build_strategy {spec!r} (want 'auto'|'local'|'sharded')"
+            f"unknown build_strategy {spec!r} "
+            "(want 'auto'|'local'|'sharded'|'distributed')"
         )
     if spec == "local":
         return "local", None
     devs = list(mesh.devices.reshape(-1)) if mesh is not None else jax.devices()
     width = largest_divisor_leq(cfg.n_clusters, len(devs))
+    if spec == "distributed":
+        if jax.process_count() > 1 and width != len(devs):
+            raise ValueError(
+                f"build_strategy='distributed': n_clusters={cfg.n_clusters} "
+                f"must be divisible by the global device count {len(devs)} "
+                f"({jax.process_count()} processes) — every process's "
+                "devices must join the build mesh"
+            )
+        return "distributed", flat_mesh(devs[:width], BUILD_AXIS)
     if spec == "auto" and width == 1:
         return "local", None
     return "sharded", flat_mesh(devs[:width], BUILD_AXIS)
@@ -534,15 +551,23 @@ class IndexBuilder:
         K, C = cfg.n_clusters, cfg.cluster_capacity
         if K * C < n:
             raise ValueError(f"capacity {C}×{K} < N={n}; raise capacity_slack")
-        # a store input — or an explicit cfg.chunk_rows — selects the
-        # out-of-core streamed pipeline; chunking fixes the accumulation
-        # order, so the two containers produce bit-identical indices
-        streamed = is_store(x) or cfg.chunk_rows > 0
-        name, mesh = (
-            ("streamed", None)
-            if streamed
-            else resolve_build_strategy(self.spec, cfg, self.mesh)
-        )
+        # multi-process jax (or an explicit "distributed" spec) takes the
+        # cross-process path first: the streamed pipeline's sequential
+        # chunk accumulation cannot be split across processes bit-equally,
+        # so distributed builds reuse the sharded collective program over
+        # the global mesh with per-process row reads instead
+        if self.spec == "distributed" or jax.process_count() > 1:
+            name, mesh = resolve_build_strategy("distributed", cfg, self.mesh)
+        else:
+            # a store input — or an explicit cfg.chunk_rows — selects the
+            # out-of-core streamed pipeline; chunking fixes the accumulation
+            # order, so the two containers produce bit-identical indices
+            streamed = is_store(x) or cfg.chunk_rows > 0
+            name, mesh = (
+                ("streamed", None)
+                if streamed
+                else resolve_build_strategy(self.spec, cfg, self.mesh)
+            )
 
         stage_s: dict = {}
         stage_rss: dict = {}
@@ -562,6 +587,9 @@ class IndexBuilder:
         elif name == "local":
             index, stragglers = self._build_local(x, stage)
             n_shards = 1
+        elif name == "distributed":
+            index, stragglers = self._build_distributed(as_store(x), mesh, stage)
+            n_shards = mesh.shape[BUILD_AXIS]
         else:
             index, stragglers = self._build_sharded(x, mesh, stage)
             n_shards = mesh.shape[BUILD_AXIS]
@@ -741,6 +769,7 @@ class IndexBuilder:
                 x_rows = _spill_sharded_scatter(
                     store, perm, K * C, d,
                     _resolve_spill_dir(cfg, store), cfg.store_dtype, chunk,
+                    max_shards=cfg.store_max_shards,
                 )
             else:  # in-memory store: scatter per chunk into one host buffer
                 buf = np.zeros((K * C, d), np.float32)
@@ -828,3 +857,171 @@ class IndexBuilder:
             )
 
         return self._finish(x, cents, assign_d, free_d, stage, knn_fn)
+
+    def _build_distributed(self, store, mesh, stage):
+        """``_build_sharded``'s collective program with per-process data
+        movement: each process reads only the contiguous row ranges its own
+        devices shard (never all N rows), assembles the global (N_pad, D)
+        via ``jax.make_array_from_single_device_arrays``, and the kmeans /
+        assign / kNN collectives (one psum, one all_gather per round) span
+        the whole ``jax.distributed`` mesh. On a single process this is the
+        sharded build bit-for-bit (same jitted programs, same shardings) —
+        which is exactly what makes a P-process run verifiable against a
+        1-process P-device run.
+
+        The cluster-major ``x_rows`` is spilled cooperatively: every
+        process writes the shard files of its own devices' cluster blocks
+        (``write_sharded(..., commit=False)`` at its row offset), then
+        process 0 commits the metadata after a barrier. Requires a spill
+        location all processes resolve identically (``cfg.checkpoint_dir``
+        or a disk-backed input store); the kNN stage reuses the in-RAM
+        per-device blocks, so the spill is never read back during the
+        build.
+        """
+        from repro.core.strategy import fetch_global, sync_processes
+        from repro.data.store import (
+            ShardedStore,
+            commit_sharded_meta,
+            write_sharded,
+        )
+        from repro.kernels import registry
+
+        cfg = self.cfg
+        n, d = store.shape
+        K, C, k = cfg.n_clusters, cfg.cluster_capacity, cfg.n_neighbors
+        block = cfg.build_block_rows
+        n_dev = mesh.shape[BUILD_AXIS]
+        devs = list(mesh.devices.reshape(-1))
+        pid = jax.process_index()
+        n_proc = jax.process_count()
+        key = jax.random.key(cfg.seed)
+
+        n_pad = -(-n // n_dev) * n_dev
+        rows_per = n_pad // n_dev
+        row_sh = NamedSharding(mesh, P(BUILD_AXIS, None))
+
+        with stage("place"):
+            pieces = []
+            for di, dev in enumerate(devs):
+                if dev.process_index != pid:
+                    continue
+                lo = min(di * rows_per, n)
+                hi = min(lo + rows_per, n)
+                blk_rows = store.read(lo, hi)
+                if blk_rows.shape[0] < rows_per:  # tail padding, one device
+                    blk_rows = np.concatenate(
+                        [blk_rows,
+                         np.zeros((rows_per - blk_rows.shape[0], d), np.float32)]
+                    )
+                pieces.append(jax.device_put(jnp.asarray(blk_rows), dev))
+            xd = jax.make_array_from_single_device_arrays(
+                (n_pad, d), row_sh, pieces
+            )
+
+        with stage("kmeans"):
+            cents = km.kmeans_fit_sharded(
+                key,
+                xd,
+                K,
+                mesh,
+                BUILD_AXIS,
+                n_iters=cfg.kmeans_iters,
+                tol=cfg.kmeans_tol,
+                impl=self.impl,
+                block=block,
+                n_real=n if n_pad != n else None,
+            )
+            jax.block_until_ready(cents)
+        cents_h = fetch_global(cents)  # replicated → local copy everywhere
+
+        with stage("assign"):
+            assign_d, free_d = _capacity_rounds_sharded(
+                mesh,
+                xd,
+                cents,
+                C,
+                registry.resolve("pairwise", self.impl),
+                block,
+                cfg.build_max_rounds,
+                cfg.build_candidates,
+                n,
+            )
+            # replicated outputs; the straggler pass runs identically on
+            # every process (deterministic host math over shared inputs)
+            assign = fetch_global(assign_d)[:n].astype(np.int64)
+            assign, stragglers = _force_place_host(
+                store, cents_h, assign, fetch_global(free_d).copy()
+            )
+
+        with stage("permute"):
+            perm_d, counts = _permutation_from_assign(
+                jnp.asarray(assign, jnp.int32), K, C
+            )
+            perm = np.asarray(perm_d).astype(np.int64)
+            counts_h = np.asarray(counts)
+            # gather each local device's cluster blocks from the store:
+            # device di owns clusters [di·K/n_dev, (di+1)·K/n_dev), i.e.
+            # x_rows rows [di·rps, (di+1)·rps) with rps = (K/n_dev)·C
+            Kl = K // n_dev
+            rps = Kl * C
+            local = [di for di, dev in enumerate(devs)
+                     if dev.process_index == pid]
+            blocks = []
+            for di in local:
+                lo = di * rps
+                sel = (perm >= lo) & (perm < lo + rps)
+                src = np.flatnonzero(sel)
+                xloc = np.zeros((rps, d), np.float32)
+                xloc[perm[src] - lo] = store.read_rows(src)
+                blocks.append(xloc)
+            if n_proc > 1:
+                if not (cfg.checkpoint_dir or store.path):
+                    raise ValueError(
+                        "distributed build: the x_rows spill needs a "
+                        "location every process resolves identically — "
+                        "set cfg.checkpoint_dir or build from a "
+                        "disk-backed store (the temp-dir fallback differs "
+                        "per process)"
+                    )
+                spill_dir = _resolve_spill_dir(cfg, store)
+                for di, xloc in zip(local, blocks):
+                    write_sharded(
+                        [xloc],
+                        spill_dir,
+                        rows_per_shard=rps,
+                        dtype=cfg.store_dtype,
+                        row_offset=di * rps,
+                        total_rows=K * C,
+                        commit=False,
+                    )
+                sync_processes("x-rows-spill")
+                if pid == 0:
+                    commit_sharded_meta(
+                        spill_dir, K * C, d,
+                        rows_per_shard=rps, dtype=cfg.store_dtype,
+                    )
+                sync_processes("x-rows-commit")
+                x_rows = ShardedStore(spill_dir)
+            else:
+                x_rows = np.concatenate(blocks)  # (K·C, D) host, like sharded
+
+        with stage("knn"):
+            blk_sh = NamedSharding(mesh, P(BUILD_AXIS, None, None))
+            xb = jax.make_array_from_single_device_arrays(
+                (K, C, d),
+                blk_sh,
+                [jax.device_put(jnp.asarray(xloc.reshape(Kl, C, d)), devs[di])
+                 for di, xloc in zip(local, blocks)],
+            )
+            knn_local_d, knn_w_d = cluster_knn_batch_sharded(
+                mesh, BUILD_AXIS, xb, counts_h, k, self.impl
+            )
+            knn_local = fetch_global(knn_local_d)
+            knn_w = fetch_global(knn_w_d)
+
+        return (
+            self._assemble(
+                store, cents_h, x_rows, perm, counts_h, knn_local, knn_w
+            ),
+            stragglers,
+        )

@@ -409,6 +409,13 @@ def kmeans_fit_sharded(
     behaviour; with the same ``tol``/``block``/``impl`` as
     :func:`kmeans_fit`, a 1-device mesh reproduces the local scan
     bit-for-bit.
+
+    Under multi-process ``jax.distributed`` the same body runs unchanged:
+    ``mesh`` spans the global device pool, ``x_sharded`` is a global view
+    assembled from per-process pieces, and the one (K, D+1) psum per
+    iteration crosses processes. A P-process run is bit-equal to a
+    1-process run over the same P devices — the psum sums the same
+    per-device partials in the same mesh order either way.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map

@@ -147,6 +147,8 @@ def cluster_knn_batch_sharded(mesh, axis: str, x_blocks, counts, k: int, impl=No
 
     from repro.kernels import registry
 
+    import numpy as np
+
     resolved = registry.resolve("pairwise", impl)
     Kc, C, _d = x_blocks.shape
     if Kc % mesh.shape[axis]:
@@ -154,7 +156,10 @@ def cluster_knn_batch_sharded(mesh, axis: str, x_blocks, counts, k: int, impl=No
             f"n_clusters={Kc} not divisible by the {mesh.shape[axis]}-device "
             f"build mesh"
         )
-    valid = jnp.arange(C)[None, :] < counts[:, None]
+    # valid stays a host array: device_put from host works under a
+    # multi-process mesh (x_blocks may already be a global jax.Array with
+    # this exact sharding — device_put is then the identity)
+    valid = np.arange(C)[None, :] < np.asarray(counts)[:, None]
     xb = jax.device_put(x_blocks, NamedSharding(mesh, P(axis, None, None)))
     vb = jax.device_put(valid, NamedSharding(mesh, P(axis, None)))
 

@@ -31,3 +31,15 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh with the pre-0.9 Auto axis-type behaviour pinned."""
     return jax.make_mesh(tuple(shape), tuple(axes), **_axis_type_kwargs(len(axes)))
+
+
+def flat_mesh(axis: str = "data", devs=None):
+    """One flat axis over ``devs`` — defaulting to the **global** device
+    pool (``jax.devices()``), which under ``jax.distributed`` spans every
+    process, never just the local one. Prefer this over hand-rolling
+    ``Mesh(jax.local_devices(), ...)``: a process-local mesh silently
+    excludes the rest of the fleet and breaks cross-process collectives.
+    """
+    from repro.core.strategy import flat_mesh as _flat
+
+    return _flat(list(devs) if devs is not None else jax.devices(), axis)

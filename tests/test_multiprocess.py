@@ -1,0 +1,277 @@
+"""Multi-process (jax.distributed) integration + unit tests.
+
+The determinism contract under test: a 2-process CPU fit — per-process
+store shards, cross-process collectives on one global mesh — is
+**bit-for-bit equal** to the 1-process sharded fit over the same global
+device count. Same for the distributed index build and for
+checkpoint/resume from a killed 2-process run.
+
+The slow tests spawn real worker processes via
+``python -m repro.launch.distributed --spawn K`` (gloo CPU collectives,
+local coordinator on an OS-assigned port); the fast tests cover the
+process-aware store/​config plumbing in-process.
+"""
+
+import os
+import socket
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# the coordinator needs a loopback TCP port; sandboxes without one skip
+# the whole module rather than failing on infrastructure
+try:
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as _s:
+        _s.bind(("127.0.0.1", 0))
+except OSError as e:  # pragma: no cover - environment-dependent
+    pytest.skip(f"no loopback TCP available ({e})", allow_module_level=True)
+
+
+def _run(args, devices=1, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.distributed", *args],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+        cwd=REPO,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fast: process-aware plumbing (no subprocesses, single device)
+# ---------------------------------------------------------------------------
+
+
+def test_process_row_range_partitions_exactly():
+    from repro.data.store import ArrayStore
+
+    st = ArrayStore(np.zeros((1001, 4), np.float32))
+    spans = [st.process_row_range(i, 3) for i in range(3)]
+    # contiguous, ordered, balanced (sizes differ by at most one), total N
+    assert spans[0][0] == 0 and spans[-1][1] == 1001
+    assert all(spans[i][1] == spans[i + 1][0] for i in range(2))
+    sizes = [hi - lo for lo, hi in spans]
+    assert max(sizes) - min(sizes) <= 1 and sum(sizes) == 1001
+    with pytest.raises(ValueError):
+        st.process_row_range(3, 3)
+
+
+def test_assigned_shards_cover_all(tmp_path):
+    from repro.data.store import ShardedStore, write_sharded
+
+    x = np.arange(700 * 3, dtype=np.float32).reshape(700, 3)
+    write_sharded(x, str(tmp_path / "st"), rows_per_shard=100)
+    st = ShardedStore(str(tmp_path / "st"))
+    a, b = st.assigned_shards(0, 2), st.assigned_shards(1, 2)
+    # every shard is someone's; the boundary shard may appear in both
+    assert sorted(set(a) | set(b)) == list(range(7))
+
+
+def test_write_sharded_offset_validation(tmp_path):
+    from repro.data.store import write_sharded
+
+    x = np.zeros((10, 2), np.float32)
+    with pytest.raises(ValueError, match="total_rows"):
+        write_sharded(x, str(tmp_path / "a"), rows_per_shard=4, row_offset=4)
+    with pytest.raises(ValueError, match="rows_per_shard"):
+        write_sharded(
+            x, str(tmp_path / "b"), rows_per_shard=4, row_offset=2, total_rows=20
+        )
+    with pytest.raises(ValueError, match="mid-shard"):
+        # 10 rows from offset 4 end at 14 — inside the next writer's shard
+        write_sharded(
+            x, str(tmp_path / "c"), rows_per_shard=4, row_offset=4,
+            total_rows=20, commit=False,
+        )
+    with pytest.raises(ValueError, match="commit"):
+        # shard-aligned partial range, but commit=True would write meta
+        # for rows no one has written yet
+        write_sharded(
+            np.zeros((8, 2), np.float32), str(tmp_path / "d"),
+            rows_per_shard=4, row_offset=4, total_rows=20, commit=True,
+        )
+
+
+def test_cooperative_write_then_commit(tmp_path):
+    """Two offset writers + a process-0-style commit ≡ one monolithic write."""
+    from repro.data.store import (
+        ShardedStore,
+        commit_sharded_meta,
+        write_sharded,
+    )
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(600, 5)).astype(np.float32)
+    mono = write_sharded(x, str(tmp_path / "mono"), rows_per_shard=100)
+
+    coop = str(tmp_path / "coop")
+    write_sharded(x[:300], coop, rows_per_shard=100, row_offset=0,
+                  total_rows=600, commit=False)
+    with pytest.raises(FileNotFoundError, match="missing"):
+        commit_sharded_meta(coop, 600, 5, rows_per_shard=100)
+    write_sharded(x[300:], coop, rows_per_shard=100, row_offset=300,
+                  total_rows=600, commit=False)
+    st = commit_sharded_meta(coop, 600, 5, rows_per_shard=100)
+    assert st.shape == mono.shape
+    np.testing.assert_array_equal(st.read(0, 600), mono.read(0, 600))
+    # re-open from disk sees the same bytes
+    np.testing.assert_array_equal(
+        ShardedStore(coop).read(0, 600), x
+    )
+
+
+def test_config_distributed_and_shard_cap():
+    from repro.configs.base import NomadConfig
+
+    assert NomadConfig(build_strategy="distributed").store_max_shards == 256
+    assert NomadConfig(store_max_shards=8).store_max_shards == 8
+    with pytest.raises(ValueError, match="store_max_shards"):
+        NomadConfig(store_max_shards=0)
+    with pytest.raises(ValueError, match="build_strategy"):
+        NomadConfig(build_strategy="bogus")
+
+
+def test_fit_result_records_process_provenance():
+    from repro.configs import get_nomad
+    from repro.core.nomad import NomadProjection
+
+    cfg = get_nomad("nomad_quickstart").replace(
+        n_points=600, n_clusters=4, n_neighbors=4, n_epochs=1
+    )
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(600, 8)).astype(np.float32)
+    res = NomadProjection(cfg).fit(x)
+    assert res.process_count == 1 and res.process_index == 0
+
+
+def test_distributed_build_matches_sharded_single_process():
+    """On one process the 'distributed' path IS the sharded program."""
+    from repro.configs import get_nomad
+    from repro.data.store import ArrayStore
+    from repro.index.build import IndexBuilder
+
+    cfg = get_nomad("nomad_quickstart").replace(
+        n_points=1501, n_clusters=4, n_neighbors=4
+    )
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(1501, 8)).astype(np.float32)
+    ref = IndexBuilder(cfg, strategy="sharded").build(x)
+    b = IndexBuilder(cfg, strategy="distributed")
+    got = b.build(ArrayStore(x))
+    assert b.report.strategy == "distributed"
+    assert "place" in b.report.stage_s
+    for name in ("knn_idx", "knn_w", "counts", "centroids", "perm"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, name)), np.asarray(getattr(got, name))
+        )
+    np.testing.assert_array_equal(np.asarray(ref.x_rows), np.asarray(got.x_rows))
+
+
+def test_strategy_describe_reports_process_topology():
+    from repro.configs import get_nomad
+    from repro.core.strategy import resolve_strategy
+
+    cfg = get_nomad("nomad_quickstart").replace(n_points=600, n_clusters=4)
+    # single-process here: 'local' resolves fine — the multi-process guard
+    # itself only trips under jax.distributed (slow 2-process tests)
+    strat = resolve_strategy("local", cfg)
+    desc = strat.describe()
+    assert desc["process_count"] == 1 and desc["process_index"] == 0
+
+
+# ---------------------------------------------------------------------------
+# slow: real 2-process runs (gloo collectives over loopback)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def corpus(tmp_path_factory):
+    from repro.data.synthetic import gaussian_mixture_store
+
+    d = str(tmp_path_factory.mktemp("mp") / "store")
+    gaussian_mixture_store(d, 4000, 16, seed=3, rows_per_shard=1000)
+    return d
+
+
+@pytest.mark.slow
+def test_two_process_fit_bit_equal_to_single(corpus, tmp_path):
+    ref_out, ref_idx = str(tmp_path / "ref.npy"), str(tmp_path / "ref.npz")
+    mp_out, mp_idx = str(tmp_path / "mp.npy"), str(tmp_path / "mp.npz")
+    r1 = _run(
+        ["--num-processes", "1", "--store", corpus, "--epochs", "3",
+         "--out", ref_out, "--dump-index", ref_idx],
+        devices=2,
+    )
+    assert r1.returncode == 0, r1.stdout[-2000:] + r1.stderr[-2000:]
+    r2 = _run(
+        ["--spawn", "2", "--store", corpus, "--epochs", "3",
+         "--out", mp_out, "--dump-index", mp_idx],
+        devices=1,
+    )
+    assert r2.returncode == 0, r2.stdout[-2000:] + r2.stderr[-2000:]
+    assert "processes=2" in r2.stdout
+    np.testing.assert_array_equal(np.load(ref_out), np.load(mp_out))
+    ref, got = np.load(ref_idx), np.load(mp_idx)
+    for k in ("knn_idx", "knn_w", "counts", "centroids", "perm"):
+        np.testing.assert_array_equal(ref[k], got[k])
+
+
+@pytest.mark.slow
+def test_two_process_crash_then_resume_bit_equal(corpus, tmp_path):
+    ck = str(tmp_path / "ck")
+    resumed, straight = str(tmp_path / "resumed.npy"), str(tmp_path / "s4.npy")
+    common = ["--spawn", "2", "--store", corpus, "--epochs", "4"]
+    crash = _run(
+        [*common, "--checkpoint-dir", ck, "--checkpoint-every", "1",
+         "--fail-at-epoch", "2"],
+    )
+    assert crash.returncode == 17, crash.stdout[-2000:] + crash.stderr[-2000:]
+    assert "CRASH INJECTION at epoch 2" in crash.stdout
+    resume = _run(
+        [*common, "--checkpoint-dir", ck, "--resume", "--out", resumed],
+    )
+    assert resume.returncode == 0, resume.stdout[-2000:] + resume.stderr[-2000:]
+    assert "resume: epoch 2" in resume.stdout
+    assert "index: cache" in resume.stdout  # p0's cached index was reused
+    clean = _run([*common, "--out", straight])
+    assert clean.returncode == 0, clean.stdout[-2000:] + clean.stderr[-2000:]
+    np.testing.assert_array_equal(np.load(resumed), np.load(straight))
+
+
+@pytest.mark.slow
+def test_missing_coordinator_fails_fast_and_loud():
+    # pre-flight validation is catchable: rc 3 + an actionable message
+    r = _run(
+        ["--num-processes", "2", "--process-id", "1", "--epochs", "1"],
+        timeout=120,
+    )
+    assert r.returncode == 3, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "distributed init failed" in r.stderr
+
+
+@pytest.mark.slow
+def test_unreachable_coordinator_does_not_hang():
+    from repro.launch.distributed import pick_free_port
+
+    port = pick_free_port()  # nothing listens here
+    r = _run(
+        ["--num-processes", "2", "--process-id", "1",
+         "--coordinator", f"127.0.0.1:{port}", "--init-timeout", "3",
+         "--epochs", "1"],
+        timeout=120,
+    )
+    # jaxlib's distributed client LOG(FATAL)s (SIGABRT) on rendezvous
+    # deadline instead of raising — either way the worker must die within
+    # the timeout, nonzero, with the deadline visible in stderr
+    assert r.returncode != 0, r.stdout[-2000:]
+    assert (
+        "DEADLINE_EXCEEDED" in r.stderr or "distributed init failed" in r.stderr
+    ), r.stderr[-2000:]
