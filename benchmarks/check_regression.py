@@ -19,6 +19,14 @@ clear both bars instantly). A path present in the baseline but missing
 from the fresh report fails too (a silently dropped stage is how a gate
 goes blind). Refreshing a baseline is one command: rerun the benchmark
 with ``--json`` onto the baseline path.
+
+Quality scores gate in the opposite direction. Any numeric leaf whose key
+ends in ``_score`` (e.g. ``scores.stability_score`` in
+BENCH_partial_fit.json) is a **floor**: the fresh value must reach at
+least ``baseline - --floor-drop`` (absolute slack, default 0.05) — higher
+is always fine, and a score leaf missing from the fresh report fails just
+like a missing wall. Walls answer "did it get slower?", floors answer
+"did the map get worse?"; one gate run checks both.
 """
 
 from __future__ import annotations
@@ -44,6 +52,22 @@ def wall_leaves(obj, path="") -> dict:
     return out
 
 
+def score_leaves(obj, path="") -> dict:
+    """{json-path → value} for every numeric ``*_score`` leaf."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in sorted(obj.items()):
+            p = f"{path}/{k}" if path else str(k)
+            if k.endswith("_score") and isinstance(v, (int, float)):
+                out[p] = float(v)
+            else:
+                out.update(score_leaves(v, p))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(score_leaves(v, f"{path}/{i}"))
+    return out
+
+
 def compare(fresh: dict, baseline: dict, threshold: float, min_wall: float):
     """Returns (rows, regressions, missing) — rows for the report table."""
     fw, bw = wall_leaves(fresh), wall_leaves(baseline)
@@ -58,6 +82,27 @@ def compare(fresh: dict, baseline: dict, threshold: float, min_wall: float):
         significant = (cur - base) >= min_wall
         regressed = over and significant
         rows.append((path, base, cur, ratio, over, regressed))
+        if regressed:
+            regressions.append(path)
+    return rows, regressions, missing
+
+
+def compare_scores(fresh: dict, baseline: dict, floor_drop: float):
+    """Floor gate: (rows, regressions, missing) over ``*_score`` leaves.
+
+    A fresh score below ``baseline - floor_drop`` regresses; a score path
+    in the baseline but absent from the fresh report is missing (and
+    fails) — a gate that stops measuring quality must not pass green.
+    """
+    fs, bs = score_leaves(fresh), score_leaves(baseline)
+    rows, regressions = [], []
+    missing = sorted(set(bs) - set(fs))
+    for path in sorted(bs):
+        if path not in fs:
+            continue
+        base, cur = bs[path], fs[path]
+        regressed = cur < base - floor_drop
+        rows.append((path, base, cur, regressed))
         if regressed:
             regressions.append(path)
     return rows, regressions, missing
@@ -78,6 +123,12 @@ def main() -> int:
         type=float,
         default=0.05,
         help="minimum absolute slowdown (s) before a relative regression gates",
+    )
+    ap.add_argument(
+        "--floor-drop",
+        type=float,
+        default=0.05,
+        help="max tolerated absolute drop below baseline for *_score leaves",
     )
     args = ap.parse_args()
 
@@ -102,6 +153,20 @@ def main() -> int:
     for path in missing:
         print(f"{path},?,MISSING,-,-,MISSING", file=sys.stderr)
 
+    srows, sregressions, smissing = compare_scores(
+        fresh, baseline, args.floor_drop
+    )
+    if srows or smissing:
+        print(f"# score floors (fresh ≥ baseline - {args.floor_drop})")
+        print("score,baseline,fresh,verdict")
+        for path, base, cur, regressed in srows:
+            verdict = "BELOW FLOOR" if regressed else "ok"
+            print(f"{path},{base:.4f},{cur:.4f},{verdict}")
+        for path in smissing:
+            print(f"{path},?,MISSING,MISSING", file=sys.stderr)
+    regressions += sregressions
+    missing += smissing
+
     if regressions or missing:
         print(
             f"# FAIL: {len(regressions)} regression(s) {regressions}, "
@@ -109,7 +174,7 @@ def main() -> int:
             file=sys.stderr,
         )
         return 1
-    print("# OK: no stage regressed beyond the threshold")
+    print("# OK: no wall regressed beyond the threshold, no score below floor")
     return 0
 
 

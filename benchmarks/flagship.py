@@ -178,8 +178,8 @@ def build_report(args, gen_wall: float, map_wall: float, stats: list) -> dict:
     }
 
 
-def main(argv=None) -> int:
-    args = parse_args(argv)
+def _run_report(args) -> dict:
+    """generate → spawn → collect, returning the report dict."""
     if not args.work_dir:
         import tempfile
 
@@ -194,8 +194,47 @@ def main(argv=None) -> int:
             import shutil
 
             shutil.rmtree(store_dir, ignore_errors=True)
+    return build_report(args, gen_wall, map_wall, stats)
 
-    report = build_report(args, gen_wall, map_wall, stats)
+
+def run(quick: bool = False):
+    """benchmarks.run entry: [(name, us_per_call, derived), …].
+
+    Spawns worker subprocesses; in an environment where that is not
+    possible (no free ports, sandboxed exec) the failure surfaces as
+    :class:`benchmarks.run.SuiteSkipped` so the harness reports *why*
+    the suite produced no rows instead of failing the whole run.
+    """
+    from benchmarks.run import SuiteSkipped
+
+    argv = ["--processes", "2", "--timeout", "1200"]
+    argv += (
+        ["--n", "20000", "--dim", "16", "--clusters", "16", "--epochs", "2"]
+        if quick
+        else ["--n", "200000", "--epochs", "3"]
+    )
+    try:
+        report = _run_report(parse_args(argv))
+    except (SystemExit, OSError, subprocess.SubprocessError) as e:
+        raise SuiteSkipped(f"multi-process spawn unavailable: {e}") from e
+    rows = [
+        (f"flagship.{name}", d["wall_s"] * 1e6, "")
+        for name, d in report["stages"].items()
+    ]
+    for p in report["per_process"]:
+        rows.append(
+            (
+                f"flagship.p{p['process']}",
+                0.0,
+                f"peak_rss_mb={p['peak_rss_mb']:.0f}",
+            )
+        )
+    return rows
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    report = _run_report(args)
     print(f"{'stage':>14}  wall_s")
     for name, d in report["stages"].items():
         print(f"{name:>14}  {d['wall_s']:.3f}")

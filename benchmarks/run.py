@@ -12,6 +12,12 @@ us_per_call, derived), …]`` and this driver prints the combined CSV.
 per-suite wall seconds, the row tuples, and the traceback tail of any
 suite that failed (``--all`` is an explicit alias for the every-suite
 default, so CI invocations read as intent rather than omission).
+
+Every known suite appears in the output exactly once: suites excluded by
+``--only`` and suites that raise :class:`SuiteSkipped` (e.g. ``flagship``
+where multi-process spawn is unavailable) are listed with their skip
+reason rather than silently omitted — a missing line in a benchmark
+report should always say why.
 """
 
 from __future__ import annotations
@@ -31,7 +37,17 @@ SUITES = {
     "index_build": "benchmarks.index_build",  # §3.2 device build vs seed host
     "serve": "benchmarks.serve_latency",  # out-of-sample transform latency
     "service_load": "benchmarks.service_load",  # HTTP-service concurrency gate
+    "flagship": "benchmarks.flagship",  # multi-process end-to-end map
+    "partial_fit": "benchmarks.partial_fit",  # incremental growth + stability
 }
+
+
+class SuiteSkipped(RuntimeError):
+    """Raised by a suite's ``run()`` when its prerequisites are absent.
+
+    Distinct from failure: the harness records the reason, prints it, and
+    exits 0 — but never drops the suite from the report.
+    """
 
 
 def main() -> int:
@@ -50,6 +66,9 @@ def main() -> int:
     if args.all and args.only:
         ap.error("--all and --only are mutually exclusive")
     only = set(args.only.split(",")) if args.only else set(SUITES)
+    unknown = sorted(only - set(SUITES))
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown} — have {sorted(SUITES)}")
 
     import importlib
 
@@ -57,10 +76,13 @@ def main() -> int:
     failed = []
     report: dict = {"benchmark": "run", "quick": bool(args.quick), "suites": {}}
     for key, mod_name in SUITES.items():
+        entry: dict = {"module": mod_name}
         if key not in only:
+            entry["skipped"] = f"not selected (--only {args.only})"
+            print(f"# skip {key}: {entry['skipped']}", flush=True)
+            report["suites"][key] = entry
             continue
         t0 = time.time()
-        entry: dict = {"module": mod_name}
         try:
             mod = importlib.import_module(mod_name)
             rows = []
@@ -68,6 +90,9 @@ def main() -> int:
                 print(f"{name},{us:.1f},{derived}", flush=True)
                 rows.append({"name": name, "us_per_call": float(us), "derived": derived})
             entry["rows"] = rows
+        except SuiteSkipped as e:
+            entry["skipped"] = str(e)
+            print(f"# skip {key}: {e}", flush=True)
         except Exception:  # noqa: BLE001 — report and continue the suite
             failed.append(key)
             entry["error"] = traceback.format_exc(limit=8)

@@ -4,5 +4,13 @@ from repro.checkpoint.checkpointer import (
     load_metadata,
     load_theta,
 )
+from repro.checkpoint.lineage import MapLineage, MapVersion
 
-__all__ = ["Checkpointer", "latest_step", "load_metadata", "load_theta"]
+__all__ = [
+    "Checkpointer",
+    "MapLineage",
+    "MapVersion",
+    "latest_step",
+    "load_metadata",
+    "load_theta",
+]

@@ -349,6 +349,11 @@ class NomadConfig:
     # DEPRECATED: setting it emits a DeprecationWarning; use kernel_impl.
     use_pallas: Optional[bool] = None
 
+    # incremental growth (repro.core.nomad.NomadProjection.partial_fit):
+    # refinement epochs run over the affected cells after an append. 0
+    # admits + patches without moving any position (pure placement).
+    partial_refine_epochs: int = 3
+
     # fault tolerance
     checkpoint_every_epochs: int = 5
     checkpoint_dir: str = ""
@@ -397,6 +402,8 @@ class NomadConfig:
             raise ValueError("service_max_delay_s must be >= 0")
         if self.service_cache_entries < 0:
             raise ValueError("service_cache_entries must be >= 0 (0 disables)")
+        if self.partial_refine_epochs < 0:
+            raise ValueError("partial_refine_epochs must be >= 0 (0 = place only)")
         if self.use_pallas is not None:
             warnings.warn(
                 "NomadConfig.use_pallas is deprecated; use "

@@ -147,6 +147,77 @@ def make_step_fn(
     return step
 
 
+def make_partial_step_fn(
+    cfg: NomadConfig,
+    *,
+    method: str = "nomad",
+    n_total: Optional[int] = None,
+):
+    """The :func:`make_step_fn` body with heads restricted to a cell subset.
+
+    ``idx`` additionally carries ``aff_cells`` (A,) global ids of the cells
+    a partial_fit touched and ``aff_cum_counts`` (A,) their cumulative real
+    counts: heads sample uniformly over the *affected* points only, mapped
+    to global rows through the affected→global cell indirection. Means,
+    global counts and the repulsive mass still span the full layout, so
+    the refined cells equilibrate against the whole map — but gradients
+    only ever land on rows of affected cells (positives are in-cluster,
+    negatives in-cell), leaving the rest of θ bit-identical.
+    """
+    n_total = n_total or cfg.n_points
+    B, S, Mn = cfg.batch_size, cfg.n_exact_negatives, cfg.n_noise
+    C = cfg.cluster_capacity
+
+    def step(theta, idx, means, global_counts, lr, key):
+        k_head, k_neg = jax.random.split(key)
+        acum = idx["aff_cum_counts"]
+        u = jax.random.randint(k_head, (B,), 0, acum[-1])
+        a = jnp.searchsorted(acum, u, side="right").astype(jnp.int32)
+        start = jnp.where(a > 0, acum[a - 1], 0)
+        cell = idx["aff_cells"][a]  # global cell ids
+        rows = cell * C + (u - start)
+        pos_rows = idx["knn_idx"][rows]
+        pos_w = idx["knn_w"][rows]
+        th_i = theta[rows]
+        th_pos = theta[pos_rows]
+
+        if method == "infonc":
+            neg_rows, _ = sample_points(k_neg, B * Mn, idx["cum_counts"], C)
+            neg_rows = neg_rows.reshape(B, Mn)
+            th_neg = theta[neg_rows]
+
+            def loss_fn(ti, tp, tn):
+                return losses.infonc_tsne_loss(ti, tp, pos_w, tn)
+
+        else:
+            neg_rows = sample_in_cluster(k_neg, cell, idx["counts"], C, S)
+            th_neg = theta[neg_rows]
+
+            def loss_fn(ti, tp, tn):
+                return losses.nomad_loss(
+                    ti,
+                    tp,
+                    pos_w,
+                    means,
+                    global_counts,
+                    cell,
+                    tn,
+                    n_noise=Mn,
+                    n_total=n_total,
+                    impl=cfg.resolved_kernel_impl(),
+                )
+
+        loss, (g_i, g_pos, g_neg) = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(
+            th_i, th_pos, th_neg
+        )
+        theta = theta.at[rows].add(-lr * g_i)
+        theta = theta.at[pos_rows.reshape(-1)].add(-lr * g_pos.reshape(-1, theta.shape[1]))
+        theta = theta.at[neg_rows.reshape(-1)].add(-lr * g_neg.reshape(-1, theta.shape[1]))
+        return theta, loss
+
+    return step
+
+
 def make_epoch_fn(cfg: NomadConfig, step_fn, steps_per_epoch: int):
     """jit-compiled epoch: refresh means once, then scan the SGD steps.
 
@@ -214,6 +285,29 @@ class FitResult:
     process_index: int = 0
 
 
+@dataclasses.dataclass
+class PartialFitResult:
+    """What one :meth:`NomadProjection.partial_fit` call produced."""
+
+    embedding: np.ndarray  # (N_old + M, out_dim) in original ∥ appended order
+    index: "AnnIndex"  # grown index (K' cells, capacity unchanged)
+    n_new: int  # appended rows admitted this call
+    n_points: int  # total rows after the append
+    losses: list  # refinement epoch mean losses
+    wall_time_s: float = 0.0
+    epoch_times: list = dataclasses.field(default_factory=list)
+    refine_epochs: int = 0
+    # admission provenance
+    affected_cells: np.ndarray = None  # (A,) cells placed into / re-seeded
+    n_split_cells: int = 0  # cells that overflowed and were re-seeded
+    n_new_cells: int = 0  # layout growth (K' - K)
+    stage_s: dict = dataclasses.field(default_factory=dict)
+    # lineage provenance (empty when cfg.checkpoint_dir is unset)
+    version: str = ""
+    parent_version: str = ""
+    checkpoint_dir: str = ""  # the self-contained version directory
+
+
 def _config_digest(cfg: NomadConfig) -> dict:
     """The config fields a checkpoint must agree on to resume bit-exactly."""
     d = dataclasses.asdict(cfg)
@@ -228,6 +322,8 @@ def _config_digest(cfg: NomadConfig) -> dict:
         "serve_knn_block",
         "transform_steps",
         "transform_lr",
+        # incremental-growth knob: changing it never alters the base fit
+        "partial_refine_epochs",
     ):
         d.pop(transient, None)
     return d
@@ -628,6 +724,300 @@ class NomadProjection:
         )
         self._fit_result = result
         self._frozen = None  # a refit invalidates any cached frozen state
+        self._server = None
+        return result
+
+    # -- incremental growth (append-only corpora) ------------------------------
+
+    def _previous_state(self):
+        """(index, theta_rows, parent_dir) of the map being grown.
+
+        In-process fit state wins; otherwise the newest lineage version
+        under ``cfg.checkpoint_dir`` (falling back to the root itself for
+        pre-lineage checkpoints) — so ``from_checkpoint(root).partial_fit``
+        needs **no access to the original corpus**: the previous rows come
+        from the cached index's ``x_rows``.
+        """
+        from repro.checkpoint import MapLineage, latest_step, load_theta
+        from repro.index.ann import index_cache_path, load_index
+
+        cfg = self.cfg
+        if self._fit_result is not None:
+            index = self._fit_result.index
+            theta_rows = np.zeros(
+                (index.n_clusters * index.capacity, cfg.out_dim), np.float32
+            )
+            theta_rows[index.perm] = self._fit_result.embedding
+            return index, theta_rows, ""
+        if not cfg.checkpoint_dir:
+            raise RuntimeError(
+                "partial_fit needs a fitted map: call fit(x) first, or load "
+                "one with NomadProjection.from_checkpoint(dir)"
+            )
+        lineage = MapLineage(cfg.checkpoint_dir)
+        base = lineage.latest()
+        base_dir = base.path if base is not None else cfg.checkpoint_dir
+        import os
+
+        cache = index_cache_path(base_dir)
+        if not os.path.exists(cache) or latest_step(base_dir) is None:
+            raise RuntimeError(
+                f"partial_fit: {base_dir} holds no fitted map (need both "
+                "index.npz and a step_*/ checkpoint) — run fit(x) with "
+                "cfg.checkpoint_dir set first"
+            )
+        index = load_index(cache)
+        theta_rows, _meta = load_theta(base_dir)
+        return index, theta_rows, base_dir
+
+    def partial_fit(
+        self,
+        new_x,
+        *,
+        callbacks=None,
+        refine_epochs: Optional[int] = None,
+        seed: Optional[int] = None,
+    ) -> PartialFitResult:
+        """Grow the fitted map in place with appended rows (no refit).
+
+        Pipeline: **place** ``new_x`` on the frozen map via the serve path
+        (initial positions + nearest-centroid target cells) → **admit**
+        into capacity-bounded cells, re-seeding only cells that overflow
+        (:mod:`repro.index.incremental`) → **patch** the in-cluster kNN
+        graph and ``x_rows`` for affected cells only → **refine** with a
+        few cheap epochs whose heads are restricted to the affected cells
+        (:class:`repro.core.strategy.PartialRefineStrategy`) → **version**
+        the artifacts: with ``cfg.checkpoint_dir`` set, a self-contained
+        ``vN/`` directory (θ checkpoint + index cache) is written and
+        recorded in the ``versions.json`` lineage, ready for
+        ``MapRegistry.swap`` / ``FrozenMap.from_checkpoint``.
+
+        Rows in cells the append never touches keep **bit-identical**
+        positions; appending 0 rows is a true no-op (no artifact changes,
+        no version written). Multi-process runs are not supported — grow
+        on one process, serve the version anywhere.
+        """
+        import os
+
+        from repro.core.strategy import (
+            EpochEndEvent,
+            EpochStartEvent,
+            PartialRefineStrategy,
+            as_callbacks,
+        )
+
+        if jax.process_count() > 1:
+            raise NotImplementedError(
+                "partial_fit is single-process: grow the map on one process "
+                "and point peers/servers at the new lineage version"
+            )
+        cfg = self.cfg
+        t0 = time.time()
+        events = as_callbacks(callbacks, None)
+        index, theta_rows, _base_dir = self._previous_state()
+        if index.capacity != cfg.cluster_capacity:
+            raise ValueError(
+                f"partial_fit: index capacity {index.capacity} != "
+                f"cfg.cluster_capacity {cfg.cluster_capacity} — partial_fit "
+                "must run with the config the map was fitted with (capacity "
+                "is a static layout property; it never changes on append)"
+            )
+
+        from repro.data.store import is_store
+
+        new_x = prepare_inputs(
+            new_x, dim=int(index.x_rows.shape[1]), caller="partial_fit"
+        )
+        if is_store(new_x):
+            new_x = new_x.materialize()  # appends are batch-sized, not corpus-sized
+        M = int(new_x.shape[0])
+        n_old = index.n_points
+
+        ckdir = cfg.checkpoint_dir
+        lineage = None
+        if ckdir:
+            from repro.checkpoint import MapLineage
+
+            lineage = MapLineage(ckdir)
+
+        if M == 0:  # the no-op invariant: nothing changes, nothing is written
+            latest = lineage.latest() if lineage is not None else None
+            return PartialFitResult(
+                embedding=index.unpermute(np.asarray(theta_rows)),
+                index=index,
+                n_new=0,
+                n_points=n_old,
+                losses=[],
+                wall_time_s=time.time() - t0,
+                refine_epochs=0,
+                affected_cells=np.zeros((0,), np.int64),
+                stage_s={},
+                version=latest.name if latest is not None else "",
+                parent_version=latest.name if latest is not None else "",
+                checkpoint_dir="",
+            )
+
+        # ---- place: the frozen-transform serve path ---------------------------
+        from repro.serve import FrozenMap, MapServer
+
+        t_place = time.time()
+        frozen = FrozenMap.from_index_theta(index, theta_rows, cfg)
+        placed = MapServer(frozen).transform(
+            np.asarray(new_x), seed=cfg.seed if seed is None else seed,
+            return_neighbors=False,
+        )
+        stage_s = {"place": time.time() - t_place}
+
+        # ---- version bookkeeping (dir must exist before a store spill) --------
+        version_name, parent_name, version_dir = "", "", ""
+        if lineage is not None:
+            if not lineage.exists():
+                # upgrade a pre-lineage checkpoint in place: the base fit
+                # becomes v0 at the root
+                lineage.record(
+                    name="v0",
+                    dirname=".",
+                    parent="",
+                    fingerprint=index.fingerprint,
+                    n_points=n_old,
+                    kind="fit",
+                )
+            parent_name = lineage.latest().name
+            version_name = lineage.next_name()
+            version_dir = os.path.join(ckdir, version_name)
+            os.makedirs(version_dir, exist_ok=True)
+
+        # ---- admit + patch (repro.index.incremental) --------------------------
+        from repro.index.incremental import admit_and_patch
+
+        spill_dir = None
+        if is_store(index.x_rows):
+            if version_dir:
+                spill_dir = os.path.join(version_dir, "x_rows_store")
+            else:
+                import tempfile
+
+                spill_dir = tempfile.mkdtemp(prefix="nomad-partial-spill-")
+        upd = admit_and_patch(
+            index,
+            theta_rows,
+            np.asarray(new_x),
+            np.asarray(placed.cells),
+            np.asarray(placed.embedding, np.float32),
+            cfg,
+            impl=cfg.resolved_kernel_impl(),
+            spill_dir=spill_dir,
+        )
+        stage_s.update(upd.stage_s)
+
+        # ---- refine: cheap epochs over affected cells only --------------------
+        t_refine = time.time()
+        refine_epochs = (
+            cfg.partial_refine_epochs if refine_epochs is None else refine_epochs
+        )
+        losses_, epoch_times = [], []
+        if refine_epochs > 0 and upd.affected_cells.size:
+            strategy = PartialRefineStrategy(upd.affected_cells)
+            theta = strategy.prepare(cfg, self.method, upd.index, upd.theta_rows)
+            # start from the final fit epoch's lr scale — the equilibrium
+            # regime the frozen rows were left in — annealed to 0 again
+            lr_r = cfg.resolved_lr0() / max(cfg.n_epochs, 1)
+            key = jax.random.fold_in(
+                jax.random.key(cfg.seed + 11), upd.index.n_points
+            )
+            for e in range(refine_epochs):
+                te = time.time()
+                f0 = 1.0 - e / refine_epochs
+                f1 = 1.0 - (e + 1) / refine_epochs
+                if events is not None:
+                    events.on_epoch_start(
+                        EpochStartEvent(
+                            e, refine_epochs, lr_r * f0, lr_r * f1, strategy.name
+                        )
+                    )
+                theta, mloss = strategy.run_epoch(
+                    theta, e, lr_r * f0, lr_r * f1, jax.random.fold_in(key, e)
+                )
+                losses_.append(mloss)
+                epoch_times.append(time.time() - te)
+                if events is not None:
+                    emb_e = (
+                        upd.index.unpermute(strategy.fetch(theta))
+                        if events.wants_embedding
+                        else None
+                    )
+                    events.on_epoch_end(
+                        EpochEndEvent(
+                            e, refine_epochs, mloss, epoch_times[-1],
+                            strategy.name, emb_e,
+                        )
+                    )
+            theta_new = strategy.fetch(theta)
+        else:
+            theta_new = np.asarray(upd.theta_rows)
+        stage_s["refine"] = time.time() - t_refine
+
+        # ---- version: self-contained dir + lineage entry ----------------------
+        t_version = time.time()
+        if lineage is not None:
+            from repro.checkpoint import Checkpointer
+            from repro.index.ann import index_cache_path, save_index
+
+            ckpt = Checkpointer(version_dir, keep=2, async_save=False)
+            ckpt.save(
+                max(refine_epochs - 1, 0),
+                {"theta": theta_new},
+                metadata={
+                    "epoch": max(refine_epochs - 1, 0),
+                    "config": dataclasses.asdict(cfg),
+                    "method": self.method,
+                    "strategy": "partial",
+                    "losses": list(losses_),
+                    "parent_version": parent_name,
+                },
+            )
+            ckpt.wait()
+            save_index(upd.index, index_cache_path(version_dir))
+            lineage.record(
+                name=version_name,
+                dirname=version_name,
+                parent=parent_name,
+                fingerprint=upd.index.fingerprint,
+                n_points=upd.index.n_points,
+                kind="partial_fit",
+            )
+            stage_s["version"] = time.time() - t_version
+
+        emb = upd.index.unpermute(theta_new)
+        result = PartialFitResult(
+            embedding=emb,
+            index=upd.index,
+            n_new=M,
+            n_points=upd.index.n_points,
+            losses=losses_,
+            wall_time_s=time.time() - t0,
+            epoch_times=epoch_times,
+            refine_epochs=refine_epochs,
+            affected_cells=upd.affected_cells,
+            n_split_cells=upd.n_split_cells,
+            n_new_cells=upd.n_new_cells,
+            stage_s=stage_s,
+            version=version_name,
+            parent_version=parent_name,
+            checkpoint_dir=version_dir,
+        )
+        # the estimator now serves (and grows) the new version
+        self._fit_result = FitResult(
+            embedding=emb,
+            index=upd.index,
+            losses=losses_,
+            wall_time_s=result.wall_time_s,
+            epoch_times=epoch_times,
+            strategy="partial",
+            index_build_strategy="incremental",
+            checkpoint_dir=version_dir,
+        )
+        self._frozen = None
         self._server = None
         return result
 

@@ -272,6 +272,55 @@ class LocalStrategy(ExecutionStrategy):
         return theta, float(loss)
 
 
+class PartialRefineStrategy(ExecutionStrategy):
+    """Refinement epochs restricted to the cells a ``partial_fit`` touched.
+
+    Same epoch contract as :class:`LocalStrategy` — means refreshed over
+    the **full** layout (repulsion still sees every cell), the usual
+    ``make_epoch_fn`` scan — but heads are sampled only from
+    ``affected_cells`` (:func:`repro.core.nomad.make_partial_step_fn`).
+    Positives come from the patched in-cluster kNN and negatives from the
+    head's own cell, so gradients never reach a row outside the affected
+    cells: everything the append didn't touch stays bit-identical, which
+    is the property the map-stability gate leans on.
+
+    Steps per epoch scale with the *affected* point count, not N — the
+    "cheap" in cheap refinement.
+    """
+
+    name = "partial"
+
+    def __init__(self, affected_cells):
+        super().__init__()
+        self.affected_cells = np.asarray(affected_cells, np.int32)
+
+    def prepare(self, cfg, method, index, theta0):
+        from repro.core.nomad import make_epoch_fn, make_partial_step_fn
+
+        if self.affected_cells.size == 0:
+            raise ValueError("PartialRefineStrategy needs >=1 affected cell")
+        counts = np.asarray(index.counts)
+        aff = self.affected_cells
+        n_aff = int(counts[aff].sum())
+        self._steps = max(1, -(-n_aff // cfg.batch_size))
+        self._refresh = cfg.mean_refresh_steps or self._steps
+        self._idx = {
+            "knn_idx": jnp.asarray(index.knn_idx, jnp.int32),
+            "knn_w": jnp.asarray(index.knn_w, jnp.float32),
+            "counts": jnp.asarray(counts, jnp.int32),
+            "cum_counts": jnp.asarray(np.cumsum(counts), jnp.int32),
+            "aff_cells": jnp.asarray(aff, jnp.int32),
+            "aff_cum_counts": jnp.asarray(np.cumsum(counts[aff]), jnp.int32),
+        }
+        step_fn = make_partial_step_fn(cfg, method=method, n_total=index.n_points)
+        self._epoch_fn = make_epoch_fn(cfg, step_fn, self._steps)
+        return jnp.asarray(theta0)
+
+    def run_epoch(self, theta, epoch, lr0, lr1, key):
+        theta, loss = self._epoch_fn(theta, self._idx, lr0, lr1, key)
+        return theta, float(loss)
+
+
 class ShardedStrategy(ExecutionStrategy):
     """Fig. 2 cluster-sharded ``shard_map`` epochs, flat mean exchange.
 

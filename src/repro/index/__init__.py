@@ -1,11 +1,14 @@
 from repro.index.ann import AnnIndex, build_index, data_fingerprint
 from repro.index.build import BuildReport, IndexBuilder, capacity_assign_device
+from repro.index.incremental import PartialUpdate, admit_and_patch
 from repro.index.kmeans import kmeans_centroids, kmeans_fit, lsh_init_centroids
 
 __all__ = [
     "AnnIndex",
     "BuildReport",
     "IndexBuilder",
+    "PartialUpdate",
+    "admit_and_patch",
     "build_index",
     "capacity_assign_device",
     "data_fingerprint",

@@ -1,0 +1,368 @@
+"""Incremental admission of appended rows into a fitted §3.2 index.
+
+The ``partial_fit`` subsystem's index half: given the previous
+:class:`~repro.index.ann.AnnIndex` + cluster-major θ buffer and a batch of
+new rows (already *placed* on the frozen map by the serve path), produce
+the grown index without rebuilding the world:
+
+1. **admit** — each new row targets its placement cell (nearest frozen
+   centroid). Cells whose ``counts + incoming`` stay within capacity take
+   the rows into their padding slots — the existing members, their rows,
+   their kNN entries and the cell centroid are all bit-untouched.
+2. **split / re-seed** — an overflowing cell is re-seeded: its members
+   (old + incoming) run a small LSH-init k-means into enough sub-cells to
+   restore the build's average fill, then the same capacity-bounded
+   bidding (:func:`~repro.index.build.capacity_assign_device`) the full
+   build uses. The first sub-cell keeps the original cell id (so every
+   *other* cell's global rows stay put); the rest append new cell blocks
+   at the end of the layout — K grows, capacity C never changes.
+3. **patch** — the in-cluster kNN graph is recomputed **only** for the
+   affected cells (one :func:`~repro.index.knn.batched_cluster_knn` over
+   their blocks, identical math to the full build); ``x_rows`` is patched
+   by block copy (ndarray) or rewritten shard-aligned into a fresh
+   sharded store (``write_sharded(row_offset=…)`` regions + one
+   ``commit_sharded_meta`` publish — the store path, unchanged shards
+   streamed straight from the previous version's store).
+
+The returned layout keeps the invariant every consumer relies on:
+``row = cell * capacity + slot``; rows of *unaffected* cells are
+bit-identical to the previous version, which is what makes the cheap
+refinement epochs (restricted to ``affected_cells``) safe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import NomadConfig
+from repro.index.ann import AnnIndex, data_fingerprint
+
+
+@dataclasses.dataclass
+class PartialUpdate:
+    """What one admission pass produced (the index half of partial_fit)."""
+
+    index: AnnIndex  # grown index (K' ≥ K cells, same capacity)
+    theta_rows: np.ndarray  # (K'·C, out_dim) patched cluster-major θ
+    affected_cells: np.ndarray  # (A,) sorted global ids of cells that changed
+    n_split_cells: int  # overflowing cells that were re-seeded
+    n_new_cells: int  # cells appended to the layout (K' - K)
+    stage_s: Dict[str, float]  # {"admit": s, "patch_knn": s, "patch_rows": s}
+
+
+def chained_fingerprint(parent_fp: str, new_x: np.ndarray) -> str:
+    """Version fingerprint of an append: hash(parent fp ∥ fp(new rows)).
+
+    Content-derived and order-sensitive — the same base map growing by the
+    same batches hashes identically, any divergence doesn't — without ever
+    re-reading the full corpus (the original rows live only in ``x_rows``).
+    """
+    h = hashlib.sha256()
+    h.update(parent_fp.encode())
+    h.update(data_fingerprint(new_x).encode())
+    return h.hexdigest()[:16]
+
+
+def _split_fill_target(cfg: NomadConfig, capacity: int) -> int:
+    # the average fill the original build aims for (C = slack·N/K ⇒ fill
+    # N/K = C/slack): re-seeded sub-cells keep the same headroom for the
+    # *next* append instead of being born full
+    return max(1, min(capacity, int(capacity / cfg.capacity_slack)))
+
+
+def _read_rows(x_rows, lo: int, hi: int) -> np.ndarray:
+    from repro.data.store import is_store
+
+    if is_store(x_rows):
+        return np.asarray(x_rows.read(lo, hi), np.float32)
+    return np.asarray(x_rows[lo:hi], np.float32)
+
+
+def _patch_store_x_rows(
+    old_store,
+    changed: Dict[int, np.ndarray],
+    K: int,
+    K2: int,
+    C: int,
+    dim: int,
+    out_dir: str,
+    cfg: NomadConfig,
+):
+    """Rewrite a store-backed ``x_rows`` into ``out_dir`` with the patch.
+
+    Shards are ``g·C`` rows with ``g`` a divisor of K, so the appended
+    region starts on a shard boundary: region ``[0, K·C)`` (unchanged
+    blocks streamed from the old store, changed blocks from RAM) and
+    region ``[K·C, K'·C)`` (the new cells) are written as two
+    ``write_sharded(commit=False)`` ranges, then published by one
+    ``commit_sharded_meta`` — the same two-writer protocol a multi-process
+    spill uses, here separating "previous layout" from "appended cells".
+    """
+    from repro.core.strategy import largest_divisor_leq
+    from repro.data.store import commit_sharded_meta, write_sharded
+
+    g = largest_divisor_leq(K, max(1, 65536 // C))
+    divisors = [d for d in range(g, K + 1) if K % d == 0]
+    for d in divisors:  # fd ceiling: coarsen shards until the count fits
+        g = d
+        if -(-K2 // g) <= max(1, cfg.store_max_shards):
+            break
+    rps = g * C
+
+    def old_region():
+        c = 0
+        while c < K:
+            if c in changed:
+                yield changed[c]
+                c += 1
+            else:
+                end = c + 1
+                while end < K and end not in changed and (end - c) < g:
+                    end += 1
+                yield _read_rows(old_store, c * C, end * C)
+                c = end
+
+    write_sharded(
+        old_region(),
+        out_dir,
+        rows_per_shard=rps,
+        dtype=cfg.store_dtype,
+        row_offset=0,
+        total_rows=K2 * C,
+        commit=False,
+    )
+    if K2 > K:
+        write_sharded(
+            (changed[c] for c in range(K, K2)),
+            out_dir,
+            rows_per_shard=rps,
+            dtype=cfg.store_dtype,
+            row_offset=K * C,
+            total_rows=K2 * C,
+            commit=False,
+        )
+    return commit_sharded_meta(
+        out_dir, K2 * C, dim, rows_per_shard=rps, dtype=cfg.store_dtype
+    )
+
+
+def admit_and_patch(
+    index: AnnIndex,
+    theta_rows: np.ndarray,
+    new_x: np.ndarray,
+    new_cells: np.ndarray,
+    new_theta: np.ndarray,
+    cfg: NomadConfig,
+    *,
+    impl="auto",
+    spill_dir: Optional[str] = None,
+) -> PartialUpdate:
+    """Admit ``new_x`` (placed at ``new_cells`` with initial positions
+    ``new_theta``) into ``index``, patching kNN/x_rows/θ incrementally.
+
+    ``spill_dir`` is where a store-backed ``x_rows`` patch is written
+    (required exactly when ``index.x_rows`` is a store). Rows of cells the
+    append never touches are bit-identical in every output artifact.
+    """
+    from repro.data.store import is_store
+    from repro.index.build import capacity_assign_device
+    from repro.index.kmeans import kmeans_centroids
+    from repro.index.knn import batched_cluster_knn
+
+    t0 = time.time()
+    K, C = index.n_clusters, index.capacity
+    dim = int(index.x_rows.shape[1])
+    N, M = index.n_points, int(new_x.shape[0])
+    k = int(index.knn_idx.shape[1])
+    out_dim = int(theta_rows.shape[1])
+    counts = np.asarray(index.counts).astype(np.int64)
+    new_cells = np.asarray(new_cells).astype(np.int64)
+    new_x = np.ascontiguousarray(new_x, np.float32)
+    new_theta = np.asarray(new_theta, np.float32)
+    theta_full = np.asarray(theta_rows, np.float32)
+
+    if new_cells.shape != (M,):
+        raise ValueError(f"new_cells {new_cells.shape} must be ({M},)")
+    if new_cells.size and (new_cells.min() < 0 or new_cells.max() >= K):
+        raise ValueError("new_cells must index the previous layout's cells")
+
+    inc = np.bincount(new_cells, minlength=K)
+    split_cells = np.flatnonzero(counts + inc > C)
+    split_set = set(int(c) for c in split_cells)
+
+    # original point id per row of the OLD layout (for re-permuting splits)
+    row_owner = np.full(K * C, -1, np.int64)
+    row_owner[np.asarray(index.perm)] = np.arange(N)
+
+    # ---- plan: appends into free slots vs full cell re-seeds ---------------
+    appends: Dict[int, np.ndarray] = {}
+    for c in np.unique(new_cells):
+        if int(c) not in split_set:
+            appends[int(c)] = np.flatnonzero(new_cells == c)
+
+    # per-cell rewrite plan: cell -> (orig ids slot-ordered, x block, θ block)
+    rewrites: Dict[int, tuple] = {}
+    new_centroids: Dict[int, np.ndarray] = {}
+    next_cell = K
+    fill = _split_fill_target(cfg, C)
+    key_base = jax.random.fold_in(jax.random.key(cfg.seed + 7), N)
+    for c in split_cells:
+        c = int(c)
+        cnt = int(counts[c])
+        old_x = _read_rows(index.x_rows, c * C, c * C + cnt)
+        old_ids = row_owner[c * C : c * C + cnt]
+        j_new = np.flatnonzero(new_cells == c)
+        mem_x = np.concatenate([old_x, new_x[j_new]], axis=0)
+        mem_ids = np.concatenate([old_ids, N + j_new])
+        mem_th = np.concatenate(
+            [theta_full[c * C : c * C + cnt], new_theta[j_new]], axis=0
+        )
+        total = mem_x.shape[0]
+        n_sub = max(2, -(-total // fill))
+        key_c = jax.random.fold_in(key_base, c)
+        cents = np.asarray(
+            kmeans_centroids(
+                key_c,
+                jnp.asarray(mem_x),
+                n_sub,
+                n_iters=cfg.kmeans_iters,
+                tol=cfg.kmeans_tol,
+                impl=impl,
+            )
+        )
+        sub = capacity_assign_device(
+            mem_x,
+            cents,
+            C,
+            impl=impl,
+            max_rounds=cfg.build_max_rounds,
+            n_cand=min(cfg.build_candidates, n_sub),
+        )
+        # non-empty sub-cells only; the first keeps the original cell id so
+        # every other cell's global row numbering survives the split
+        members = [np.flatnonzero(sub == s) for s in range(n_sub)]
+        members = [m for m in members if m.size]
+        for s_i, m in enumerate(members):
+            cell_id = c if s_i == 0 else next_cell
+            if s_i > 0:
+                next_cell += 1
+            xb = np.zeros((C, dim), np.float32)
+            xb[: m.size] = mem_x[m]
+            tb = np.zeros((C, out_dim), np.float32)
+            tb[: m.size] = mem_th[m]
+            rewrites[cell_id] = (mem_ids[m], xb, tb)
+            new_centroids[cell_id] = (
+                mem_x[m].mean(axis=0, dtype=np.float64).astype(np.float32)
+            )
+
+    K2 = next_cell
+    n_new_cells = K2 - K
+
+    # ---- assemble the grown layout ----------------------------------------
+    counts2 = np.zeros((K2,), counts.dtype)
+    counts2[:K] = counts
+    centroids2 = np.zeros((K2, dim), np.float32)
+    centroids2[:K] = np.asarray(index.centroids, np.float32)
+    perm2 = np.zeros((N + M,), np.int64)
+    perm2[:N] = np.asarray(index.perm)
+    theta2 = np.zeros((K2 * C, out_dim), np.float32)
+    theta2[: K * C] = theta_full
+
+    # blocks whose content changes (re-used by both x_rows paths + the kNN
+    # re-pass — affected cells are exactly the changed blocks)
+    changed: Dict[int, np.ndarray] = {}
+    for c, (ids, xb, tb) in rewrites.items():
+        counts2[c] = ids.size
+        centroids2[c] = new_centroids[c]
+        perm2[ids] = c * C + np.arange(ids.size)
+        theta2[c * C : (c + 1) * C] = tb
+        changed[c] = xb
+    for c, j_list in appends.items():
+        base = int(counts[c])
+        xb = np.zeros((C, dim), np.float32)
+        xb[: base + j_list.size] = np.concatenate(
+            [_read_rows(index.x_rows, c * C, c * C + base), new_x[j_list]]
+        )
+        changed[c] = xb
+        rows = c * C + base + np.arange(j_list.size)
+        perm2[N + j_list] = rows
+        theta2[rows] = new_theta[j_list]
+        counts2[c] = base + j_list.size
+        # centroid deliberately frozen: admission must not move the
+        # geometry other cells' placements were computed against
+
+    stage_admit = time.time() - t0
+
+    # ---- kNN patch: recompute only the affected cells' blocks --------------
+    t1 = time.time()
+    affected = np.array(sorted(changed), np.int64)
+    knn_idx2 = np.zeros((K2 * C, k), index.knn_idx.dtype)
+    knn_idx2[: K * C] = index.knn_idx
+    knn_idx2[K * C :] = np.arange(K * C, K2 * C)[:, None]  # self = dead edge
+    knn_w2 = np.zeros((K2 * C, k), np.float32)
+    knn_w2[: K * C] = index.knn_w
+    if affected.size:
+        x_blocks = np.stack([changed[int(c)] for c in affected])
+        valid = np.arange(C)[None, :] < counts2[affected][:, None]
+        knn_local, knn_w_aff = batched_cluster_knn(
+            jnp.asarray(x_blocks), jnp.asarray(valid), k, impl
+        )
+        knn_local = np.asarray(knn_local).astype(np.int64)
+        knn_w_aff = np.asarray(knn_w_aff, np.float32)
+        base_rows = (affected * C)[:, None, None]
+        knn_glob = knn_local + base_rows
+        self_rows = base_rows + np.arange(C)[None, :, None]
+        knn_glob = np.where(knn_w_aff > 0, knn_glob, self_rows)
+        flat_rows = (affected[:, None] * C + np.arange(C)[None, :]).reshape(-1)
+        knn_idx2[flat_rows] = knn_glob.reshape(-1, k)
+        knn_w2[flat_rows] = knn_w_aff.reshape(-1, k)
+    stage_knn = time.time() - t1
+
+    # ---- x_rows patch ------------------------------------------------------
+    t2 = time.time()
+    if is_store(index.x_rows):
+        if not spill_dir:
+            raise ValueError(
+                "admit_and_patch: index.x_rows is store-backed — pass "
+                "spill_dir= for the patched store"
+            )
+        x_rows2 = _patch_store_x_rows(
+            index.x_rows, changed, K, K2, C, dim, spill_dir, cfg
+        )
+    else:
+        x_rows2 = np.zeros((K2 * C, dim), np.asarray(index.x_rows).dtype)
+        x_rows2[: K * C] = index.x_rows
+        for c, xb in changed.items():
+            x_rows2[c * C : (c + 1) * C] = xb
+    stage_rows = time.time() - t2
+
+    grown = AnnIndex(
+        x_rows=x_rows2,
+        knn_idx=knn_idx2,
+        knn_w=knn_w2,
+        counts=counts2,
+        centroids=centroids2,
+        perm=perm2,
+        capacity=C,
+        n_points=N + M,
+        fingerprint=chained_fingerprint(index.fingerprint, new_x),
+    )
+    return PartialUpdate(
+        index=grown,
+        theta_rows=theta2,
+        affected_cells=affected,
+        n_split_cells=int(split_cells.size),
+        n_new_cells=n_new_cells,
+        stage_s={
+            "admit": stage_admit,
+            "patch_knn": stage_knn,
+            "patch_rows": stage_rows,
+        },
+    )

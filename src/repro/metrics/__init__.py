@@ -1,4 +1,4 @@
-from repro.metrics.neighborhood import neighborhood_preservation
+from repro.metrics.neighborhood import map_stability, neighborhood_preservation
 from repro.metrics.triplet import random_triplet_accuracy
 
-__all__ = ["neighborhood_preservation", "random_triplet_accuracy"]
+__all__ = ["map_stability", "neighborhood_preservation", "random_triplet_accuracy"]

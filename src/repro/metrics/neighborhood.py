@@ -70,3 +70,40 @@ def neighborhood_preservation(
         len(set(a.tolist()) & set(b.tolist())) / k for a, b in zip(hi, lo)
     ]
     return float(np.mean(overlap))
+
+
+def map_stability(
+    emb_prev: np.ndarray,
+    emb_new: np.ndarray,
+    k: int = 10,
+    n_queries: int = 2000,
+    seed: int = 0,
+) -> float:
+    """Map-stability score in [0, 1]: how much a map *moved* under an update.
+
+    Both arguments are embeddings of the **same rows in the same order** —
+    the previous map version and the new one restricted to the rows both
+    contain (after ``partial_fit`` of M appended rows, pass
+    ``new_embedding[:N_old]``). The score is the k-neighborhood overlap
+    between the two low-dimensional spaces: 1.0 means every old row kept
+    exactly its old neighbors (the map did not jump), 0.0 means no
+    neighborhood survived. It is the same exact blocked kNN machinery as
+    :func:`neighborhood_preservation` with the previous embedding standing
+    in for the high-dimensional space.
+
+    Applying one row permutation to *both* embeddings leaves the score
+    unchanged whenever every row is queried (``n_queries >= n``); with a
+    query subsample the sampled row *ids* differ under permutation, so
+    exact invariance holds only at full coverage (tested that way).
+    """
+    emb_prev = np.asarray(emb_prev)
+    emb_new = np.asarray(emb_new)
+    if emb_prev.shape[0] != emb_new.shape[0]:
+        raise ValueError(
+            f"map_stability compares the same rows across versions: got "
+            f"{emb_prev.shape[0]} previous vs {emb_new.shape[0]} new rows — "
+            "slice the grown embedding to the shared prefix first"
+        )
+    return neighborhood_preservation(
+        emb_prev, emb_new, k=k, n_queries=n_queries, seed=seed
+    )

@@ -162,6 +162,30 @@ class MapRegistry:
             **server_kw,
         )
 
+    def load_lineage(
+        self,
+        lineage_root: str,
+        *,
+        map_version: Optional[str] = None,
+        version: Optional[str] = None,
+        **load_kw,
+    ) -> MapHandle:
+        """Load a version from a ``versions.json`` lineage (the artifact
+        layout ``partial_fit`` grows under one checkpoint root).
+
+        ``map_version`` names the lineage entry (default: the newest —
+        "serve the latest map"); ``version`` is the registry label it
+        serves under (default: the lineage name, so a hot swap onto a
+        grown map reads ``registry.load_lineage(root)`` and the service's
+        ``/versions`` listing shows ``v1``, ``v2`` … matching the lineage).
+        Every lineage version directory is self-contained, so this is just
+        resolution + the ordinary :meth:`load`.
+        """
+        from repro.checkpoint.lineage import MapLineage
+
+        v = MapLineage(lineage_root).resolve(map_version)
+        return self.load(v.path, version=version or v.name, **load_kw)
+
     # -- resolution ------------------------------------------------------------
 
     def get(self, version: Optional[str] = None) -> MapHandle:

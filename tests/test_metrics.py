@@ -2,9 +2,14 @@
 chance; metrics are monotone in corruption."""
 
 import numpy as np
+import pytest
 
 from repro.data.synthetic import gaussian_mixture
-from repro.metrics import neighborhood_preservation, random_triplet_accuracy
+from repro.metrics import (
+    map_stability,
+    neighborhood_preservation,
+    random_triplet_accuracy,
+)
 
 
 def test_identity_scores_one():
@@ -38,3 +43,37 @@ def test_corruption_monotonicity():
         y = x[:, :2] + rng.normal(0, noise, (400, 2)).astype(np.float32)
         scores.append(random_triplet_accuracy(x, y, 8000))
     assert scores[0] >= scores[1] >= scores[2] - 0.02
+
+
+def test_map_stability_identity_is_one():
+    emb = np.random.default_rng(4).normal(0, 1, (300, 2)).astype(np.float32)
+    assert map_stability(emb, emb.copy(), k=10, n_queries=300) == 1.0
+
+
+def test_map_stability_row_permutation_invariant():
+    """The score compares maps, not row order: relabeling the rows of BOTH
+    versions consistently cannot change it (exact at full query coverage)."""
+    rng = np.random.default_rng(5)
+    a = rng.normal(0, 1, (250, 2)).astype(np.float32)
+    b = (a + rng.normal(0, 0.3, a.shape)).astype(np.float32)
+    p = rng.permutation(250)
+    s = map_stability(a, b, k=10, n_queries=250)
+    s_perm = map_stability(a[p], b[p], k=10, n_queries=250)
+    assert s == pytest.approx(s_perm, abs=1e-9)
+
+
+def test_map_stability_degrades_monotonically_with_jitter():
+    rng = np.random.default_rng(6)
+    a = rng.normal(0, 1, (400, 2)).astype(np.float32)
+    scores = []
+    for noise in (0.0, 0.2, 1.0, 5.0):
+        b = a + rng.normal(0, noise, a.shape).astype(np.float32)
+        scores.append(map_stability(a, b, k=10, n_queries=400))
+    assert scores[0] == 1.0
+    assert scores[0] > scores[1] > scores[2] > scores[3]
+
+
+def test_map_stability_rejects_row_count_mismatch():
+    a = np.zeros((10, 2), np.float32)
+    with pytest.raises(ValueError, match="same rows"):
+        map_stability(a, np.zeros((12, 2), np.float32))

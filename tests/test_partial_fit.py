@@ -1,0 +1,284 @@
+"""Incremental growth (`partial_fit`): the no-op is bit-identical, admission
+keeps every index invariant, unaffected cells never move, quality matches a
+joint refit, and the versioned-lineage / store-backed / registry paths all
+serve the grown map."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.lineage import VERSIONS_FILE, MapLineage
+from repro.configs.base import NomadConfig
+from repro.core.nomad import NomadProjection
+from repro.data.synthetic import gaussian_mixture
+from repro.metrics import map_stability, neighborhood_preservation
+
+
+def make_cfg(n, *, dim=8, clusters=4, ckdir="", epochs=4, refine=2, seed=0, **kw):
+    return NomadConfig(
+        n_points=n,
+        dim=dim,
+        n_clusters=clusters,
+        n_neighbors=5,
+        n_noise=8,
+        n_exact_negatives=4,
+        batch_size=256,
+        n_epochs=epochs,
+        partial_refine_epochs=refine,
+        strategy="local",
+        build_strategy="local",
+        seed=seed,
+        checkpoint_dir=ckdir,
+        **kw,
+    )
+
+
+def separated(n_per, n_modes, dim, scale, seed=0, which=None):
+    """Modes 50 units apart — appends aimed at ``which`` stay in its cells."""
+    rng = np.random.default_rng(seed)
+    centers = np.eye(n_modes, dim, dtype=np.float32) * 50.0
+    modes = [which] * n_per if which is not None else list(range(n_modes)) * n_per
+    labels = np.asarray(sorted(modes))
+    x = centers[labels] + rng.normal(0, scale, (len(labels), dim)).astype(np.float32)
+    return x.astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def grown():
+    """One fit → partial_fit pair shared by the invariant tests."""
+    x, _ = gaussian_mixture(600, 8, n_components=4, seed=0)
+    y, _ = gaussian_mixture(150, 8, n_components=4, seed=1)
+    est = NomadProjection(make_cfg(600))
+    base = est.fit(x)
+    pf = est.partial_fit(y)
+    return x, y, base, pf
+
+
+def test_append_invariants(grown):
+    x, y, base, pf = grown
+    idx = pf.index
+    n = len(x) + len(y)
+    assert pf.n_points == idx.n_points == n
+    assert pf.embedding.shape[0] == n and np.isfinite(pf.embedding).all()
+    # capacity is fixed forever; growth is new cells, never wider ones
+    assert idx.capacity == base.index.capacity
+    k2 = idx.counts.shape[0]
+    assert int(idx.counts.sum()) == n == len(idx.perm)
+    assert (idx.counts <= idx.capacity).all()
+    # perm injects original ids into distinct live layout slots
+    assert len(np.unique(idx.perm)) == n
+    assert idx.perm.min() >= 0 and idx.perm.max() < k2 * idx.capacity
+    np.testing.assert_array_equal(
+        np.asarray(idx.x_rows)[idx.perm], np.vstack([x, y])
+    )
+    # kNN edges stay inside the grown layout
+    assert idx.knn_idx.min() >= 0
+    assert idx.knn_idx.max() < k2 * idx.capacity
+
+
+def test_old_rows_keep_their_neighborhoods(grown):
+    x, y, base, pf = grown
+    stab = map_stability(base.embedding, pf.embedding[: len(x)], k=10, n_queries=600)
+    assert stab > 0.5, stab
+
+
+def test_noop_partial_fit_bit_identical(tmp_path):
+    """Growing by zero rows changes no artifact bit and writes nothing."""
+    ckdir = str(tmp_path / "ck")
+    x, _ = gaussian_mixture(400, 8, n_components=4, seed=2)
+    est = NomadProjection(make_cfg(400, ckdir=ckdir))
+    base = est.fit(x)
+
+    def snapshot():
+        return sorted(
+            os.path.join(r, f)
+            for r, _d, fs in os.walk(ckdir)
+            for f in fs
+        )
+
+    before = snapshot()
+    pf = est.partial_fit(np.zeros((0, 8), np.float32))
+    assert pf.n_new == 0
+    np.testing.assert_array_equal(pf.embedding, base.embedding)
+    np.testing.assert_array_equal(
+        np.asarray(pf.index.x_rows), np.asarray(base.index.x_rows)
+    )
+    np.testing.assert_array_equal(pf.index.perm, base.index.perm)
+    assert snapshot() == before
+    assert not os.path.exists(os.path.join(ckdir, VERSIONS_FILE))
+
+
+def test_unaffected_cells_bit_identical():
+    """An append aimed at one mode must not move rows anywhere else."""
+    x = separated(100, 8, 8, 0.5, seed=3)
+    y = separated(40, 8, 8, 0.5, seed=4, which=0)
+    est = NomadProjection(make_cfg(800, clusters=8, seed=3))
+    base = est.fit(x)
+    pf = est.partial_fit(y)
+
+    cap = base.index.capacity
+    k_old = base.index.counts.shape[0]
+    affected = set(np.asarray(pf.affected_cells).tolist())
+    unaffected = [c for c in range(k_old) if c not in affected]
+    assert unaffected, "append touched every cell — test data not separated"
+
+    old_x, new_x = np.asarray(base.index.x_rows), np.asarray(pf.index.x_rows)
+    for c in unaffected:
+        lo, hi = c * cap, (c + 1) * cap
+        np.testing.assert_array_equal(new_x[lo:hi], old_x[lo:hi])
+        np.testing.assert_array_equal(
+            pf.index.knn_idx[lo:hi], base.index.knn_idx[lo:hi]
+        )
+    # original rows living in unaffected cells keep layout slot AND θ exactly
+    in_unaff = ~np.isin(base.index.perm // cap, np.asarray(pf.affected_cells))
+    ids = np.flatnonzero(in_unaff)
+    assert ids.size > 0
+    np.testing.assert_array_equal(pf.index.perm[ids], base.index.perm[ids])
+    np.testing.assert_array_equal(pf.embedding[ids], base.embedding[ids])
+
+
+def test_overflow_splits_and_stays_capacity_bounded():
+    """Appending a whole mode's worth of rows must split, not overflow."""
+    x = separated(80, 4, 8, 0.5, seed=5)
+    y = separated(120, 4, 8, 0.5, seed=6, which=1)
+    est = NomadProjection(make_cfg(320, clusters=4, seed=5))
+    base = est.fit(x)
+    pf = est.partial_fit(y)
+    assert pf.n_split_cells >= 1
+    assert pf.n_new_cells >= 1
+    assert pf.index.counts.shape[0] > base.index.counts.shape[0]
+    assert (pf.index.counts <= pf.index.capacity).all()
+    n = 320 + 120
+    assert len(np.unique(pf.index.perm)) == n
+    np.testing.assert_array_equal(
+        np.asarray(pf.index.x_rows)[pf.index.perm], np.vstack([x, y])
+    )
+
+
+def test_quality_matches_joint_refit():
+    """fit(X) + partial_fit(Y) ≈ fit(X ∥ Y) on the old rows (the acceptance
+    bar CI gates via benchmarks/partial_fit.py's np_old_score floor)."""
+    x, _ = gaussian_mixture(1000, 16, n_components=8, seed=7)
+    y, _ = gaussian_mixture(200, 16, n_components=8, seed=8)
+    kw = dict(dim=16, clusters=8, epochs=8, refine=3, seed=7)
+    est = NomadProjection(make_cfg(1000, **kw))
+    est.fit(x)
+    pf = est.partial_fit(y)
+    joint = NomadProjection(make_cfg(1200, **kw)).fit(np.vstack([x, y]))
+    np_partial = neighborhood_preservation(x, pf.embedding[:1000], k=10, n_queries=500)
+    np_joint = neighborhood_preservation(x, joint.embedding[:1000], k=10, n_queries=500)
+    assert np_partial >= np_joint - 0.05, (np_partial, np_joint)
+
+
+def test_partial_fit_deterministic():
+    x, _ = gaussian_mixture(400, 8, n_components=4, seed=9)
+    y, _ = gaussian_mixture(100, 8, n_components=4, seed=10)
+    runs = []
+    for _ in range(2):
+        est = NomadProjection(make_cfg(400, seed=9))
+        est.fit(x)
+        runs.append(est.partial_fit(y))
+    np.testing.assert_array_equal(runs[0].embedding, runs[1].embedding)
+    np.testing.assert_array_equal(runs[0].index.perm, runs[1].index.perm)
+
+
+def test_partial_fit_before_fit_raises(tmp_path):
+    est = NomadProjection(make_cfg(100, ckdir=str(tmp_path / "empty")))
+    with pytest.raises((RuntimeError, ValueError, FileNotFoundError)):
+        est.partial_fit(np.zeros((5, 8), np.float32))
+
+
+def test_lineage_chain_across_processes(tmp_path):
+    """fit → partial_fit → (new estimator from disk) → partial_fit: the
+    versions.json chain records parentage and every version dir serves."""
+    from repro.serve.frozen import FrozenMap
+
+    ckdir = str(tmp_path / "ck")
+    x, _ = gaussian_mixture(400, 8, n_components=4, seed=11)
+    y1, _ = gaussian_mixture(100, 8, n_components=4, seed=12)
+    y2, _ = gaussian_mixture(80, 8, n_components=4, seed=13)
+
+    est = NomadProjection(make_cfg(400, ckdir=ckdir, seed=11))
+    est.fit(x)
+    pf1 = est.partial_fit(y1)
+    assert pf1.version and pf1.checkpoint_dir
+
+    est2 = NomadProjection.from_checkpoint(ckdir)  # fresh process analogue
+    pf2 = est2.partial_fit(y2)
+    assert pf2.parent_version == pf1.version
+    assert pf2.n_points == 580
+
+    lin = MapLineage(ckdir)
+    versions = lin.load()
+    assert [v.kind for v in versions] == ["fit", "partial_fit", "partial_fit"]
+    assert versions[0].dirname == "."  # the base fit is v0, in the root
+    assert versions[1].parent == versions[0].name
+    assert versions[2].parent == versions[1].name
+    assert len({v.fingerprint for v in versions}) == 3
+    assert [v.n_points for v in versions] == [400, 500, 580]
+    # every version dir is self-contained: serve any point in history
+    for v, n in zip(versions, (400, 500, 580)):
+        fz = FrozenMap.from_checkpoint(v.path)
+        assert fz.n_points == n
+    assert lin.resolve(None).name == versions[2].name
+
+
+def test_registry_serves_lineage(tmp_path):
+    from repro.service.registry import MapRegistry
+
+    ckdir = str(tmp_path / "ck")
+    x, _ = gaussian_mixture(300, 8, n_components=4, seed=14)
+    y, _ = gaussian_mixture(90, 8, n_components=4, seed=15)
+    est = NomadProjection(make_cfg(300, ckdir=ckdir, seed=14))
+    est.fit(x)
+    pf = est.partial_fit(y)
+
+    reg = MapRegistry()
+    try:
+        newest = reg.load_lineage(ckdir)
+        assert newest.version == pf.version
+        assert newest.frozen.n_points == 390
+        base = reg.load_lineage(ckdir, map_version="v0", version="base", activate=False)
+        assert base.frozen.n_points == 300
+        out = newest.server.transform(x[:8], seed=0)
+        assert out.embedding.shape == (8, est.cfg.out_dim)
+    finally:
+        reg.close()
+
+
+def test_store_backed_rows_patch(tmp_path):
+    """A store-backed corpus grows by patching shards, never materializing."""
+    from repro.data.store import ShardedStore, write_sharded
+
+    store_dir = str(tmp_path / "corpus")
+    ckdir = str(tmp_path / "ck")
+    x, _ = gaussian_mixture(400, 8, n_components=4, seed=16)
+    y, _ = gaussian_mixture(120, 8, n_components=4, seed=17)
+    write_sharded(x, store_dir)
+
+    est = NomadProjection(make_cfg(400, ckdir=ckdir, seed=16, chunk_rows=128))
+    est.fit(store_dir)
+    pf = est.partial_fit(y)
+
+    assert isinstance(pf.index.x_rows, ShardedStore)
+    rows = pf.index.x_rows.materialize()
+    np.testing.assert_array_equal(rows[pf.index.perm], np.vstack([x, y]))
+    # the version dir owns its grown store — deleting the original corpus
+    # must not break serving the new version
+    assert pf.checkpoint_dir and os.path.isdir(pf.checkpoint_dir)
+    assert os.path.commonpath(
+        [os.path.abspath(pf.index.x_rows.path), os.path.abspath(pf.checkpoint_dir)]
+    ) == os.path.abspath(pf.checkpoint_dir)
+
+
+def test_refine_zero_is_place_only():
+    x, _ = gaussian_mixture(300, 8, n_components=4, seed=18)
+    y, _ = gaussian_mixture(60, 8, n_components=4, seed=19)
+    est = NomadProjection(make_cfg(300, seed=18))
+    base = est.fit(x)
+    pf = est.partial_fit(y, refine_epochs=0)
+    assert pf.refine_epochs == 0 and pf.losses == []
+    # admission reorders layout slots but never rewrites a row's θ value,
+    # so with zero refinement every old coordinate is bit-identical
+    np.testing.assert_array_equal(pf.embedding[:300], base.embedding)
