@@ -39,6 +39,7 @@ SUITES = {
     "service_load": "benchmarks.service_load",  # HTTP-service concurrency gate
     "flagship": "benchmarks.flagship",  # multi-process end-to-end map
     "partial_fit": "benchmarks.partial_fit",  # incremental growth + stability
+    "pipeline": "benchmarks.pipeline",  # embed→store→fit→inverse→explore
 }
 
 

@@ -5,7 +5,11 @@ the decode dry-run cells lower, exercised end to end on CPU.
     PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b --new-tokens 24
 
 Works for every decode-capable zoo family (dense / MoE / SSM / hybrid /
-SWA ring buffer).
+SWA ring buffer). With ``--map-lookup`` the demo closes the loop with the
+embed→map pipeline: it streams a reference corpus through the same model
+into a NOMAD map, then asks — via the **public** ``FrozenMap.neighbors``
+frozen-index query, the same call ``POST /explore`` uses — which corpus
+documents each decoded continuation lands next to.
 """
 
 import sys
@@ -24,6 +28,13 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument(
+        "--map-lookup",
+        action="store_true",
+        help="fit a small map over a reference corpus embedded by this model "
+        "and report each continuation's nearest corpus docs "
+        "(public FrozenMap.neighbors)",
+    )
     args = ap.parse_args()
 
     import jax
@@ -76,6 +87,39 @@ def main():
     for b in range(args.batch):
         print(f"  seq{b}: …{prompts[b,-5:].tolist()} → {gen[b,:12].tolist()}…")
     assert np.isfinite(np.asarray(logits)).all()
+
+    if args.map_lookup and cfg.family != "vlm":
+        import tempfile
+
+        from repro.configs.base import NomadConfig
+        from repro.core.nomad import NomadProjection
+        from repro.data.synthetic import class_token_corpus
+        from repro.pipeline import embed_to_store, make_embed_fn
+        from repro.serve.frozen import FrozenMap
+
+        # a reference corpus embedded by the same model, streamed to disk
+        docs, classes = class_token_corpus(512, args.prompt_len, cfg.vocab_size)
+        with tempfile.TemporaryDirectory() as d:
+            store = embed_to_store(params, cfg, docs, d, doc_batch=128)
+            ncfg = NomadConfig(
+                n_points=store.shape[0], dim=store.shape[1],
+                n_clusters=8, n_epochs=4, batch_size=512, chunk_rows=1024,
+            )
+            fz = FrozenMap.from_fit(NomadProjection(ncfg).fit(store), ncfg)
+        # embed prompt+continuation with the same pooled forward, then ask
+        # the frozen index (public API) what corpus docs live nearest
+        fwd = make_embed_fn(cfg)
+        full = np.concatenate([prompts, gen], axis=1).astype(np.int32)
+        vecs = np.asarray(fwd(params, jnp.asarray(full)))
+        ids, dists = fz.neighbors(vecs, k=3)
+        print("nearest corpus docs per continuation (id:class @ dist):")
+        for b in range(args.batch):
+            near = ", ".join(
+                f"{i}:{classes[i]}@{d:.2f}"
+                for i, d in zip(ids[b], dists[b]) if i >= 0
+            )
+            print(f"  seq{b}: {near}")
+
     print("OK")
 
 

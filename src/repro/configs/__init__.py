@@ -11,7 +11,14 @@ from repro.configs.minitron_4b import CONFIG as MINITRON
 from repro.configs.yi_34b import CONFIG as YI34B
 from repro.configs.hubert_xlarge import CONFIG as HUBERT
 from repro.configs.internvl2_76b import CONFIG as INTERNVL2
-from repro.configs.nomad_workloads import NOMAD_WORKLOADS, QUICKSTART, PUBMED, WIKI60M
+from repro.configs.nomad_workloads import (
+    NOMAD_WORKLOADS,
+    PIPELINE_WORKLOADS,
+    PipelineWorkload,
+    QUICKSTART,
+    PUBMED,
+    WIKI60M,
+)
 
 ARCHS: dict[str, ArchConfig] = {
     c.name: c
@@ -49,6 +56,8 @@ __all__ = [
     "SHAPES",
     "ARCHS",
     "NOMAD_WORKLOADS",
+    "PIPELINE_WORKLOADS",
+    "PipelineWorkload",
     "get_arch",
     "get_nomad",
     "reduced",

@@ -1,0 +1,166 @@
+"""Stage 1 of the embed→map→explore pipeline: streaming model embedding.
+
+The paper's maps are built from vectors a real model produced. This module
+drives any zoo architecture (``data/embeddings.py``'s pooled forward) over
+token batches and lands the vectors **directly in a sharded on-disk store**
+— the pooled ``(N, D)`` matrix never materialises on host. Two overlapped
+stages run concurrently:
+
+* a :class:`repro.data.loader.Prefetcher` worker thread runs the jitted
+  model forward for batch *i+1* (device compute + the device→host copy of
+  the pooled rows), while
+* the consumer thread writes batch *i*'s rows into ``write_sharded()``
+  chunks (disk I/O).
+
+Chunk contents depend only on (params, token batches, pool) — the worker
+calls the *same* jitted function in the same order a materialising loop
+would — so ``fit(embed_to_store(...))`` is bit-for-bit
+``fit(embed_corpus(...))`` for every architecture family (tested in
+tests/test_pipeline.py, the same contract PR 5 pinned for
+``fit(store) ≡ fit(ndarray)``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Iterator, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.embeddings import hidden_states
+
+
+def make_embed_fn(cfg: ArchConfig, pool: str = "mean"):
+    """The jitted ``(params, tokens (B, S)) -> pooled (B, D) f32`` forward.
+
+    One function per (cfg, pool) — reuse it across batches so the compile
+    is paid once per batch shape.
+    """
+    if pool not in ("mean", "last"):
+        raise ValueError(f"unknown pool {pool!r} (want 'mean'|'last')")
+
+    @jax.jit
+    def fwd(params, tokens):
+        h = hidden_states(params, cfg, tokens=tokens)
+        v = jnp.mean(h, axis=1) if pool == "mean" else h[:, -1, :]
+        return v.astype(jnp.float32)
+
+    return fwd
+
+
+def _batch_slices(tokens: np.ndarray, batch: int) -> Sequence[np.ndarray]:
+    return [tokens[s : s + batch] for s in range(0, tokens.shape[0], batch)]
+
+
+def embed_chunks(
+    params,
+    cfg: ArchConfig,
+    token_batches: Union[np.ndarray, Sequence[np.ndarray]],
+    *,
+    pool: str = "mean",
+    doc_batch: int = 128,
+    depth: int = 2,
+) -> Iterator[np.ndarray]:
+    """Yield pooled ``(B, D)`` float32 chunks, model forward prefetched.
+
+    ``token_batches`` is either a ``(N, S)`` token array (cut into
+    ``doc_batch``-row forwards) or an explicit sequence of ``(B, S)``
+    batches. The forward for batch *i+1* runs on a Prefetcher worker
+    while the consumer (typically ``write_sharded``) handles batch *i* —
+    the model-forward / disk-write overlap of the streaming pipeline. A
+    forward error re-raises in the consumer (Prefetcher contract), never
+    hangs the pipeline.
+    """
+    if isinstance(token_batches, np.ndarray):
+        batches: Sequence[np.ndarray] = _batch_slices(token_batches, doc_batch)
+    else:
+        batches = list(token_batches)
+    if not batches:
+        return
+    fwd = make_embed_fn(cfg, pool)
+
+    from repro.data.loader import Prefetcher
+
+    def make(step: int):
+        # np.asarray blocks on the device result: the worker owns the
+        # forward AND the device→host copy, the consumer only writes
+        return np.asarray(fwd(params, jnp.asarray(batches[step])))
+
+    pf = Prefetcher(make, depth=depth, max_steps=len(batches))
+    try:
+        for _ in range(len(batches)):
+            _step, chunk = next(pf)
+            yield chunk
+    finally:
+        pf.close()
+
+
+def embed_to_store(
+    params,
+    cfg: ArchConfig,
+    token_batches: Union[np.ndarray, Sequence[np.ndarray]],
+    out_dir: str,
+    *,
+    pool: str = "mean",
+    doc_batch: int = 128,
+    rows_per_shard: int = 8192,
+    dtype: str = "float32",
+    depth: int = 2,
+):
+    """Embed token batches straight into a sharded store at ``out_dir``.
+
+    Peak host memory is O(doc_batch · D + rows_per_shard · D): the chunk
+    iterator feeds ``write_sharded`` which re-blocks rows to shards and
+    commits ``meta.json`` last (a crashed embed run never leaves a
+    directory that parses as a store). Returns the committed
+    :class:`repro.data.store.ShardedStore`.
+    """
+    from repro.data.store import write_sharded
+
+    return write_sharded(
+        embed_chunks(
+            params,
+            cfg,
+            token_batches,
+            pool=pool,
+            doc_batch=doc_batch,
+            depth=depth,
+        ),
+        out_dir,
+        rows_per_shard=rows_per_shard,
+        dtype=dtype,
+    )
+
+
+def embed_dim(cfg: ArchConfig) -> int:
+    """The pooled-vector dimensionality of an embedder (== d_model)."""
+    return cfg.d_model
+
+
+def n_embed_batches(n_docs: int, doc_batch: int) -> int:
+    return math.ceil(n_docs / doc_batch)
+
+
+def init_embedder(workload, seed: int = 0, **arch_overrides):
+    """(params, reduced ArchConfig) for one named pipeline workload."""
+    acfg = workload.arch_config(**arch_overrides)
+    from repro.models import lm
+
+    params = lm.init_params(jax.random.key(seed), acfg)
+    return params, acfg
+
+
+def corpus_for(workload, seed: Optional[int] = None):
+    """The workload's synthetic class-structured token corpus."""
+    from repro.data.synthetic import class_token_corpus
+
+    return class_token_corpus(
+        workload.n_docs,
+        workload.seq_len,
+        workload.vocab_size,
+        n_classes=workload.n_classes,
+        seed=0 if seed is None else seed,
+    )

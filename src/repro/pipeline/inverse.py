@@ -1,0 +1,303 @@
+"""Stage 2 of the pipeline: a parametric inverse projection (2D → embedding).
+
+A served NOMAD map answers "where does this vector live?" —
+``MapServer.transform``. The MapExplorer-style interaction needs the
+*other* direction: "what lives at this spot?" — click a 2D coordinate,
+get back a plausible embedding-space vector, then look up the corpus rows
+nearest to it. Deep Learning Multidimensional Projections (PAPERS.md)
+shows a small MLP trained on (projection, input) pairs suffices for that
+inverse; here the pairs are sampled straight from the trained map — the
+fitted positions θ against the frozen input vectors x of the same rows.
+
+The head is deliberately tiny (2 → hidden → … → D): it trains in seconds
+on CPU with a fully jitted ``lax.scan`` loop, is deterministic per seed
+(fixed-key fold_in schedule — tested), and checkpoints beside the map as
+``inverse.npz`` in the same directory as ``index.npz``, so
+
+* ``FrozenMap.from_checkpoint`` serving nodes pick it up with
+  :func:`load_inverse` (no training data needed), and
+* a service hot swap (``MapRegistry.load``/``load_lineage``) carries it
+  onto the new version automatically — every lineage version directory
+  stays self-contained.
+
+``checkpoint→reload ≡ in-memory`` is bit-for-bit: the npz round-trip
+stores the exact float32 parameters (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INVERSE_FILE = "inverse.npz"
+
+
+@dataclasses.dataclass
+class InverseProjection:
+    """A trained 2D → embedding decoder head.
+
+    ``layers`` is a list of ``(w, b)`` float32 pairs; inputs are
+    standardised by ``(mu_in, sd_in)`` (stored, so a loaded head is
+    self-contained). All state is plain numpy — a head is trivially
+    picklable/serialisable and owns its one jitted decode function.
+    """
+
+    layers: List[Tuple[np.ndarray, np.ndarray]]
+    mu_in: np.ndarray  # (in_dim,) input standardiser
+    sd_in: np.ndarray  # (in_dim,)
+    seed: int = 0
+    train_steps: int = 0
+    train_loss: float = float("nan")  # final-step batch MSE
+
+    def __post_init__(self):
+        self._decode_jit = None
+
+    @property
+    def in_dim(self) -> int:
+        return int(self.layers[0][0].shape[0])
+
+    @property
+    def out_dim(self) -> int:
+        return int(self.layers[-1][0].shape[1])
+
+    @property
+    def hidden(self) -> Tuple[int, ...]:
+        return tuple(int(w.shape[1]) for w, _ in self.layers[:-1])
+
+    def decode(self, theta) -> np.ndarray:
+        """Map 2D coordinates ``(B, in_dim)`` to embedding vectors
+        ``(B, out_dim)`` (float32, on host)."""
+        q = np.asarray(theta, np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        if q.ndim != 2 or q.shape[1] != self.in_dim:
+            raise ValueError(
+                f"decode: expected (n, {self.in_dim}) coordinates, "
+                f"got shape {q.shape}"
+            )
+        if not np.isfinite(q).all():
+            raise ValueError("decode: coordinates contain NaN/Inf")
+        if self._decode_jit is None:
+            self._decode_jit = jax.jit(_mlp_apply)
+        params = _pack(self.layers, self.mu_in, self.sd_in)
+        return np.asarray(self._decode_jit(params, jnp.asarray(q)))
+
+
+# -- the MLP ------------------------------------------------------------------
+
+
+def _pack(layers, mu_in, sd_in) -> dict:
+    return {
+        "w": [jnp.asarray(w) for w, _ in layers],
+        "b": [jnp.asarray(b) for _, b in layers],
+        "mu": jnp.asarray(mu_in),
+        "sd": jnp.asarray(sd_in),
+    }
+
+
+def _mlp_apply(params: dict, q: jax.Array) -> jax.Array:
+    h = (q - params["mu"]) / params["sd"]
+    n = len(params["w"])
+    for i, (w, b) in enumerate(zip(params["w"], params["b"])):
+        h = h @ w + b
+        if i < n - 1:
+            h = jax.nn.gelu(h)
+    return h
+
+
+def _init_params(key, dims: List[int]) -> dict:
+    ws, bs = [], []
+    for i in range(len(dims) - 1):
+        k = jax.random.fold_in(key, i)
+        fan_in = dims[i]
+        scale = float(np.sqrt(2.0 / fan_in))
+        if i == len(dims) - 2:
+            scale *= 0.1  # small final layer: start near the mean target
+        ws.append(jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32) * scale)
+        bs.append(jnp.zeros((dims[i + 1],), jnp.float32))
+    return {"w": ws, "b": bs}
+
+
+# -- training -----------------------------------------------------------------
+
+
+def train_inverse(
+    theta: np.ndarray,
+    x: np.ndarray,
+    *,
+    hidden: Tuple[int, ...] = (128, 128),
+    steps: int = 1_500,
+    batch: int = 512,
+    lr: float = 3e-3,
+    weight_decay: float = 1e-4,
+    seed: int = 0,
+) -> InverseProjection:
+    """Fit the decoder on (θ, x) pairs sampled from a trained map.
+
+    ``theta`` is the fitted ``(N, out_dim)`` embedding, ``x`` the matching
+    ``(N, D)`` input vectors. The whole optimisation — minibatch sampling,
+    forward, MSE, AdamW — is one jitted ``lax.scan``; the RNG schedule is
+    ``fold_in(key(seed), step)``, so a fixed seed reproduces the head
+    bit-for-bit (tested).
+    """
+    from repro.optim import AdamW, warmup_cosine
+
+    th = np.asarray(theta, np.float32)
+    xs = np.asarray(x, np.float32)
+    if th.ndim != 2 or xs.ndim != 2 or th.shape[0] != xs.shape[0]:
+        raise ValueError(
+            f"train_inverse: want matched (N, in_dim)/(N, D) pairs, got "
+            f"{th.shape} / {xs.shape}"
+        )
+    if th.shape[0] < 2:
+        raise ValueError("train_inverse: need at least 2 (θ, x) pairs")
+    n = th.shape[0]
+    batch = min(batch, n)
+    mu = th.mean(0)
+    sd = np.maximum(th.std(0), 1e-6)
+    dims = [th.shape[1], *hidden, xs.shape[1]]
+
+    params = _init_params(jax.random.key(seed), dims)
+    opt = AdamW(
+        schedule=warmup_cosine(lr, min(100, max(1, steps // 10)), steps),
+        weight_decay=weight_decay,
+        moment_dtype="float32",
+    )
+    opt_state = opt.init(params)
+    thd = jnp.asarray(th)
+    xsd = jnp.asarray(xs)
+    mud, sdd = jnp.asarray(mu), jnp.asarray(sd)
+    base_key = jax.random.key(seed)
+
+    @jax.jit
+    def fit(params, opt_state):
+        def step(carry, t):
+            p, s = carry
+            kt = jax.random.fold_in(base_key, t)
+            idx = jax.random.randint(kt, (batch,), 0, n)
+
+            def loss_fn(p):
+                full = {"w": p["w"], "b": p["b"], "mu": mud, "sd": sdd}
+                pred = _mlp_apply(full, thd[idx])
+                return jnp.mean(jnp.square(pred - xsd[idx]))
+
+            loss, g = jax.value_and_grad(loss_fn)(p)
+            p, s = opt.update(p, g, s)
+            return (p, s), loss
+
+        (p, _), losses = jax.lax.scan(step, (params, opt_state), jnp.arange(steps))
+        return p, losses
+
+    params, losses = fit(params, opt_state)
+    layers = [
+        (np.asarray(w, np.float32), np.asarray(b, np.float32))
+        for w, b in zip(params["w"], params["b"])
+    ]
+    return InverseProjection(
+        layers=layers,
+        mu_in=mu.astype(np.float32),
+        sd_in=sd.astype(np.float32),
+        seed=seed,
+        train_steps=steps,
+        train_loss=float(losses[-1]),
+    )
+
+
+def inverse_from_frozen(frozen, **train_kw) -> InverseProjection:
+    """Train the head from a :class:`repro.serve.frozen.FrozenMap` — the
+    (θ, x) pairs are the map's own valid rows, scattered back to original
+    corpus order (layout-independent training data)."""
+    inv_perm = np.asarray(frozen.inv_perm)
+    valid = inv_perm >= 0
+    n = int(valid.sum())
+    theta = np.zeros((n, frozen.out_dim), np.float32)
+    x = np.zeros((n, frozen.dim), np.float32)
+    theta[inv_perm[valid]] = np.asarray(frozen.theta_rows)[valid]
+    x[inv_perm[valid]] = np.asarray(frozen.x_rows)[valid]
+    return train_inverse(theta, x, **train_kw)
+
+
+def roundtrip_score(inv: InverseProjection, theta, x) -> float:
+    """Fraction of embedding-space variance the inverse recovers:
+    ``1 − ‖decode(θ) − x‖² / ‖x − x̄‖²`` (R²; 1 = perfect, ≤0 = no better
+    than predicting the mean). This is the ``*_score`` leaf CI floors."""
+    xs = np.asarray(x, np.float32)
+    pred = inv.decode(theta)
+    mse = float(np.mean(np.square(pred - xs)))
+    var = float(np.mean(np.square(xs - xs.mean(0))))
+    return 1.0 - mse / max(var, 1e-12)
+
+
+# -- persistence --------------------------------------------------------------
+
+
+def inverse_path(checkpoint_dir: str) -> str:
+    """Where the head lives inside a map's checkpoint directory —
+    beside ``index.npz``, so every lineage version dir stays
+    self-contained and a hot swap carries the head with the map."""
+    return os.path.join(checkpoint_dir, INVERSE_FILE)
+
+
+def save_inverse(checkpoint_dir: str, inv: InverseProjection) -> str:
+    """Atomic (tmp + replace) write of ``inverse.npz``. Returns the path."""
+    os.makedirs(checkpoint_dir, exist_ok=True)
+    path = inverse_path(checkpoint_dir)
+    payload = {"mu_in": inv.mu_in, "sd_in": inv.sd_in}
+    for i, (w, b) in enumerate(inv.layers):
+        payload[f"w{i}"] = w
+        payload[f"b{i}"] = b
+    payload["meta"] = np.frombuffer(
+        json.dumps(
+            {
+                "n_layers": len(inv.layers),
+                "seed": inv.seed,
+                "train_steps": inv.train_steps,
+                "train_loss": inv.train_loss,
+            }
+        ).encode(),
+        dtype=np.uint8,
+    )
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **payload)
+    os.replace(tmp, path)
+    return path
+
+
+def load_inverse(
+    checkpoint_dir: str, *, missing_ok: bool = False
+) -> Optional[InverseProjection]:
+    """Load ``inverse.npz`` from a checkpoint dir. With ``missing_ok`` a
+    map without a trained head returns ``None`` (the registry's probe);
+    otherwise a missing file raises with the training hint."""
+    path = inverse_path(checkpoint_dir)
+    if not os.path.exists(path):
+        if missing_ok:
+            return None
+        raise FileNotFoundError(
+            f"no inverse head at {path} — train one with "
+            "repro.pipeline.inverse.train_inverse (or run_pipeline) and "
+            "save_inverse() it beside the map's checkpoint"
+        )
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["meta"]).decode())
+        layers = [
+            (
+                np.asarray(z[f"w{i}"], np.float32),
+                np.asarray(z[f"b{i}"], np.float32),
+            )
+            for i in range(int(meta["n_layers"]))
+        ]
+        return InverseProjection(
+            layers=layers,
+            mu_in=np.asarray(z["mu_in"], np.float32),
+            sd_in=np.asarray(z["sd_in"], np.float32),
+            seed=int(meta["seed"]),
+            train_steps=int(meta["train_steps"]),
+            train_loss=float(meta["train_loss"]),
+        )

@@ -63,6 +63,72 @@ class FrozenMap:
     def dim(self) -> int:
         return int(self.x_rows.shape[1])
 
+    # -- public frozen-index kNN -----------------------------------------------
+
+    def neighbors(self, vec, k: Optional[int] = None):
+        """Corpus rows nearest to embedding vector(s) ``vec``, via the
+        frozen §3.2 index: centroid assign → in-cell kNN → unpermute to
+        original ids. This is the public "what lives near this vector?"
+        query — the ``/explore`` endpoint and the examples use it instead
+        of reaching into ``repro.index.knn`` internals.
+
+        ``vec`` is ``(D,)`` or ``(B, D)``; returns ``(ids, dists)`` of
+        shape ``(k,)``/``(B, k)`` — ``ids`` int32 original corpus ids
+        (-1 padding when the cell holds fewer than ``k`` rows), ``dists``
+        float32 Euclidean distances (inf on padding). ``k`` defaults to
+        ``cfg.n_neighbors``. The jitted query is cached per ``k`` on the
+        instance; results match the transform path's neighbor report
+        bit-for-bit (same kernels, same order).
+        """
+        q = np.asarray(vec, np.float32)
+        squeeze = q.ndim == 1
+        if squeeze:
+            q = q[None, :]
+        if q.ndim != 2 or q.shape[1] != self.dim:
+            raise ValueError(
+                f"neighbors: expected ({self.dim},) or (n, {self.dim}) "
+                f"vectors, got shape {np.asarray(vec).shape}"
+            )
+        if not np.isfinite(q).all():
+            raise ValueError("neighbors: query vectors contain NaN/Inf")
+        kk = self.cfg.n_neighbors if k is None else int(k)
+        if not 1 <= kk <= self.capacity:
+            raise ValueError(
+                f"neighbors: k={kk} outside [1, capacity={self.capacity}]"
+            )
+        cache = getattr(self, "_neighbors_jit", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_neighbors_jit", cache)
+        fn = cache.get(kk)
+        if fn is None:
+            C = self.capacity
+            impl = self.cfg.resolved_kernel_impl()
+            block = self.cfg.serve_knn_block
+
+            @jax.jit
+            def fn(fza, qx):
+                from repro.index.knn import query_cluster_knn
+                from repro.kernels import registry
+
+                own, _ = registry.dispatch(
+                    "kmeans_assign", qx, fza["centroids"], impl=impl
+                )
+                slot, d2, valid = query_cluster_knn(
+                    qx, own, fza["x_blocks"], fza["counts"], kk, block=block
+                )
+                nb_row = own[:, None] * C + slot
+                ids = jnp.where(valid, fza["inv_perm"][nb_row], -1)
+                dists = jnp.where(valid, jnp.sqrt(d2), jnp.inf)
+                return ids, dists
+
+            cache[kk] = fn
+        from repro.serve.transform import frozen_arrays
+
+        ids, dists = fn(frozen_arrays(self), jnp.asarray(q))
+        ids, dists = np.asarray(ids), np.asarray(dists)
+        return (ids[0], dists[0]) if squeeze else (ids, dists)
+
     # -- constructors ----------------------------------------------------------
 
     @classmethod

@@ -21,7 +21,7 @@ registry swaps maps under load without dropping either.
 
 from repro.service.batcher import Batcher, BatcherClosed, BatcherStats
 from repro.service.cache import ResultCache, make_key, query_fingerprint
-from repro.service.core import MapService, ProjectOutcome
+from repro.service.core import ExploreOutcome, MapService, ProjectOutcome
 from repro.service.metrics import LatencyWindow, ServiceMetrics
 from repro.service.registry import MapHandle, MapRegistry, map_fingerprint
 
@@ -29,6 +29,7 @@ __all__ = [
     "Batcher",
     "BatcherClosed",
     "BatcherStats",
+    "ExploreOutcome",
     "LatencyWindow",
     "MapHandle",
     "MapRegistry",

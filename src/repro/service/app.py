@@ -14,6 +14,12 @@ hint. Endpoints:
   batch count). Neighbor distances use ``-1.0`` where the neighbor id is
   ``-1`` (dead edge): the float payload stays strict-JSON (no
   ``Infinity`` literals);
+* ``POST /explore`` — the inverse: body ``{"coords": [[x, y], ...],
+  "k": null, "map_version": null}``. Each 2D map coordinate is decoded
+  to an embedding-space vector by the map's inverse head (the
+  ``inverse.npz`` the pipeline checkpoints beside the map) and answered
+  with the nearest corpus rows from the frozen index — "what lives at
+  this spot?". 400 when the served map has no inverse head;
 * ``GET  /maps``    — every registered version + which one is active;
 * ``POST /maps``    — hot swap: load a checkpoint dir, warm, activate,
   optionally retire the old version — all while serving;
@@ -60,6 +66,12 @@ class ProjectRequest(BaseModel):
     return_neighbors: bool = True
     map_version: Optional[str] = None
     use_cache: bool = True
+
+
+class ExploreRequest(BaseModel):
+    coords: List[List[float]] = Field(..., description="(n, 2) map coordinates")
+    k: Optional[int] = None
+    map_version: Optional[str] = None
 
 
 class SwapRequest(BaseModel):
@@ -130,6 +142,29 @@ def create_app(service: Optional[MapService] = None, **service_kw):
                 res.neighbor_ids, res.neighbor_dists
             )
         return body
+
+    @app.post("/explore")
+    def explore(req: ExploreRequest):
+        svc.metrics.inc("http./explore")
+        try:
+            outcome = svc.explore(
+                np.asarray(req.coords, np.float32),
+                k=req.k,
+                map_version=req.map_version,
+            )
+        except (ValueError, KeyError, RuntimeError) as e:
+            status = 404 if isinstance(e, KeyError) else 400
+            raise HTTPException(status_code=status, detail=str(e)) from None
+        return {
+            "map_version": outcome.map_version,
+            "map_fingerprint": outcome.map_fingerprint,
+            "wall_s": outcome.wall_s,
+            "embedding": outcome.embedding.astype(float).tolist(),
+            "neighbor_ids": outcome.neighbor_ids.astype(int).tolist(),
+            "neighbor_dists": _json_dists(
+                outcome.neighbor_ids, outcome.neighbor_dists
+            ),
+        }
 
     @app.get("/maps")
     def maps():

@@ -41,6 +41,23 @@ class ProjectOutcome:
     wall_s: float
 
 
+@dataclasses.dataclass
+class ExploreOutcome:
+    """One served ``/explore`` request: "what lives at this 2D spot?".
+
+    ``embedding`` is the inverse head's decoded vector per coordinate;
+    ``neighbor_ids``/``neighbor_dists`` are the corpus rows the frozen
+    §3.2 index puts nearest to it (-1 / inf padding, as everywhere)."""
+
+    coords: np.ndarray  # (B, 2) the query coordinates
+    embedding: np.ndarray  # (B, D) decoded embedding-space vectors
+    neighbor_ids: np.ndarray  # (B, k) int32 original corpus ids
+    neighbor_dists: np.ndarray  # (B, k) float32 embedding-space distances
+    map_version: str
+    map_fingerprint: str
+    wall_s: float
+
+
 class MapService:
     """Registry + cache + metrics behind one ``project()`` entry point."""
 
@@ -137,6 +154,52 @@ class MapService:
         raise RuntimeError(
             f"request lost the swap race {SWAP_RETRIES} times in a row — "
             "is something retiring maps in a tight loop?"
+        )
+
+    def explore(
+        self,
+        coords,
+        *,
+        k: Optional[int] = None,
+        map_version: Optional[str] = None,
+    ) -> ExploreOutcome:
+        """The inverse of :meth:`project`: given 2D map coordinate(s),
+        decode an embedding-space vector with the map's inverse head and
+        return the corpus rows the frozen index puts nearest to it — the
+        MapExplorer "what lives at this spot?" query.
+
+        Needs a version whose checkpoint carried ``inverse.npz``
+        (``describe()['has_inverse']``); a map without one raises with
+        the training hint. Explore never touches the batcher: decode +
+        kNN is one light jitted call on the handle's own frozen state,
+        so a racing hot swap simply means this request answers from the
+        map it resolved — exactly the ``project()`` semantics.
+        """
+        t0 = time.time()
+        self.metrics.inc("explore.requests")
+        handle = self.registry.get(map_version)
+        if handle.inverse is None:
+            raise ValueError(
+                f"map {handle.version!r} has no inverse head — fit one with "
+                "repro.pipeline (run_pipeline or train_inverse + "
+                "save_inverse beside the checkpoint) and reload the version"
+            )
+        q = np.asarray(coords, np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        emb = handle.inverse.decode(q)  # validates shape/NaN
+        ids, dists = handle.frozen.neighbors(emb, k=k)
+        self.metrics.inc("explore.served")
+        wall = time.time() - t0
+        self.metrics.record_latency("explore", wall)
+        return ExploreOutcome(
+            coords=q,
+            embedding=emb,
+            neighbor_ids=ids,
+            neighbor_dists=dists,
+            map_version=handle.version,
+            map_fingerprint=handle.fingerprint,
+            wall_s=wall,
         )
 
     # -- introspection (the /health, /maps, /metrics bodies) -------------------

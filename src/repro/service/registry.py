@@ -49,7 +49,9 @@ def map_fingerprint(frozen: FrozenMap) -> str:
 
 @dataclasses.dataclass
 class MapHandle:
-    """One servable map version: frozen state + server + batcher."""
+    """One servable map version: frozen state + server + batcher, plus the
+    optional inverse head (2D → embedding) when the checkpoint carried an
+    ``inverse.npz`` — what the ``/explore`` endpoint decodes with."""
 
     version: str
     server: MapServer
@@ -57,6 +59,7 @@ class MapHandle:
     fingerprint: str
     source: str = "in-process"
     created_at: float = dataclasses.field(default_factory=time.time)
+    inverse: Optional[object] = None  # pipeline.inverse.InverseProjection
 
     @property
     def frozen(self) -> FrozenMap:
@@ -78,6 +81,7 @@ class MapHandle:
             "n_shards": self.server.n_shards,
             "microbatch": self.server.microbatch,
             "batch_rows": self.server.batch_rows,
+            "has_inverse": self.inverse is not None,
         }
 
 
@@ -101,6 +105,7 @@ class MapRegistry:
         warm: bool = True,
         source: str = "in-process",
         max_delay_s: Optional[float] = None,
+        inverse=None,
         **server_kw,
     ) -> MapHandle:
         """Register an already-loaded FrozenMap (or a configured MapServer).
@@ -108,7 +113,9 @@ class MapRegistry:
         Warming runs one dummy single-row transform through the server so
         the jit compile is paid before :meth:`activate` exposes the
         version to traffic — a hot swap must never stall live requests on
-        a cold compile.
+        a cold compile. ``inverse`` optionally attaches a trained
+        :class:`repro.pipeline.inverse.InverseProjection` so the version
+        can serve ``/explore``.
         """
         if isinstance(frozen_or_server, MapServer):
             if server_kw:
@@ -124,6 +131,7 @@ class MapRegistry:
             batcher=Batcher(server, max_delay_s=max_delay_s),
             fingerprint=map_fingerprint(server.frozen),
             source=source,
+            inverse=inverse,
         )
         with self._lock:
             if version is None:
@@ -150,7 +158,12 @@ class MapRegistry:
         **server_kw,
     ) -> MapHandle:
         """Load a checkpoint dir into a servable version (θ + index cache,
-        no training data — the ``FrozenMap.from_checkpoint`` path)."""
+        no training data — the ``FrozenMap.from_checkpoint`` path). An
+        ``inverse.npz`` beside the checkpoint (the pipeline writes one) is
+        picked up automatically, so a hot swap carries the explore head
+        with the map."""
+        from repro.pipeline.inverse import load_inverse
+
         frozen = FrozenMap.from_checkpoint(checkpoint_dir, cfg)
         return self.add(
             frozen,
@@ -159,6 +172,7 @@ class MapRegistry:
             warm=warm,
             source=checkpoint_dir,
             max_delay_s=max_delay_s,
+            inverse=load_inverse(checkpoint_dir, missing_ok=True),
             **server_kw,
         )
 

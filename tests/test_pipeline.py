@@ -1,0 +1,384 @@
+"""The end-to-end pipeline's differential test layer.
+
+The acceptance bar this file pins down:
+
+* **streamed ≡ materialized** — for every architecture family in
+  ``PIPELINE_WORKLOADS`` (dense / SSM / MoE), embedding a corpus straight
+  into a sharded store and fitting from it is **bit-for-bit** the map the
+  old collect-the-matrix-then-fit path produces, and the store's bytes
+  are exactly ``embed_corpus``'s matrix;
+* **one validation gate** — NaN and float64 corpora fail a store-backed
+  fit through ``prepare_inputs`` with the *same actionable error* the
+  in-memory path raises;
+* **the inverse head is reproducible** — fixed seed ⇒ bit-identical
+  parameters, checkpoint→reload ≡ in-memory bit-for-bit, and the
+  round-trip R² (``roundtrip_score``) clears a committed floor (the same
+  quantity ``benchmarks/pipeline.py`` gates in CI via ``score_leaves``);
+* **the public frozen-index query** — ``FrozenMap.neighbors`` reports
+  exactly the ids/dists the transform path reports for the same queries;
+* **explore serves** — ``MapService.explore`` decodes + looks up through
+  a checkpoint-loaded handle; a map without an inverse head fails with
+  the training hint;
+* **RSS stays O(chunk)** — the streamed example's peak host RSS stays
+  measurably below the materializing path's (interposer subprocess, the
+  PR-5 pattern).
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs import PIPELINE_WORKLOADS
+from repro.core.nomad import NomadProjection, prepare_inputs
+from repro.data.embeddings import embed_corpus
+from repro.data.store import MemmapStore
+from repro.pipeline import (
+    corpus_for,
+    embed_chunks,
+    embed_to_store,
+    init_embedder,
+    inverse_from_frozen,
+    load_inverse,
+    roundtrip_score,
+    run_pipeline,
+    save_inverse,
+    train_inverse,
+)
+from repro.serve.frozen import FrozenMap
+from repro.service import MapService
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# committed floor for the inverse round-trip R² at the fixture's scale;
+# benchmarks/pipeline.py gates the full-size per-family scores in CI
+ROUNDTRIP_R2_FLOOR = 0.15
+
+
+def tiny(name: str):
+    """A CI-sized copy of a registered workload (topology preserved)."""
+    return dataclasses.replace(
+        PIPELINE_WORKLOADS[name],
+        n_docs=256,
+        seq_len=32,
+        doc_batch=64,
+        n_epochs=2,
+        n_clusters=8,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tentpole differential: streamed embed→store→fit ≡ materialize-then-fit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(PIPELINE_WORKLOADS))
+def test_streamed_fit_bit_equals_materialized_fit(name, tmp_path):
+    """Per architecture family: the streaming pipeline must change the
+    map by exactly nothing. Shard size is deliberately ≠ doc_batch ≠
+    chunk_rows — none of the three blockings may leak into the bits."""
+    w = tiny(name)
+    tokens, _ = corpus_for(w)
+    params, acfg = init_embedder(w)
+    store = embed_to_store(
+        params, acfg, tokens, str(tmp_path / "st"),
+        doc_batch=w.doc_batch, rows_per_shard=100,
+    )
+    mat = embed_corpus(
+        params, acfg,
+        [tokens[i : i + w.doc_batch] for i in range(0, w.n_docs, w.doc_batch)],
+    )
+    # stage-1 differential: the store holds embed_corpus's exact bytes
+    np.testing.assert_array_equal(store.materialize(), mat)
+
+    cfg = w.nomad_config(w.n_docs, mat.shape[1], chunk_rows=64, seed=0)
+    e_streamed = NomadProjection(cfg).fit(store).embedding
+    e_materialized = NomadProjection(cfg).fit(mat).embedding
+    np.testing.assert_array_equal(e_streamed, e_materialized)
+
+
+def test_embed_chunks_matches_explicit_batches(tmp_path):
+    """A (N, S) token array and the equivalent explicit batch list stream
+    identical chunks (the doc_batch slicing is the only difference)."""
+    w = tiny("pipeline_phi4_mini")
+    tokens, _ = corpus_for(w)
+    params, acfg = init_embedder(w)
+    auto = list(embed_chunks(params, acfg, tokens, doc_batch=w.doc_batch))
+    explicit = list(
+        embed_chunks(
+            params, acfg,
+            [tokens[i : i + w.doc_batch] for i in range(0, w.n_docs, w.doc_batch)],
+        )
+    )
+    assert len(auto) == len(explicit)
+    for a, b in zip(auto, explicit):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_embed_worker_error_reraises_in_consumer(tmp_path):
+    """A poisoned forward (wrong token rank) fails the consumer loop with
+    the worker's exception — the Prefetcher contract — instead of hanging
+    the pipeline or committing a half-written store."""
+    w = tiny("pipeline_phi4_mini")
+    params, acfg = init_embedder(w)
+    bad = [np.zeros((4, 8, 3), np.int32)]  # 3-D tokens: embed_in raises
+    with pytest.raises(Exception):
+        list(embed_chunks(params, acfg, bad))
+    out = str(tmp_path / "st")
+    with pytest.raises(Exception):
+        embed_to_store(params, acfg, bad, out)
+    assert not os.path.exists(os.path.join(out, "meta.json"))  # no commit
+
+
+# ---------------------------------------------------------------------------
+# One validation gate: NaN / float64 corpora fail stores and arrays alike
+# ---------------------------------------------------------------------------
+
+
+def test_nan_gate_same_error_for_store_and_ndarray(tmp_path):
+    x = np.random.default_rng(0).normal(size=(200, 16)).astype(np.float32)
+    x[13, 5] = np.nan
+    with pytest.raises(ValueError) as e_arr:
+        prepare_inputs(x, caller="fit")
+    np.save(str(tmp_path / "bad.npy"), x)
+    with pytest.raises(ValueError) as e_store:
+        prepare_inputs(
+            MemmapStore(str(tmp_path / "bad.npy")), caller="fit", chunk_rows=64
+        )
+    assert str(e_arr.value) == str(e_store.value)
+    assert "non-finite" in str(e_arr.value)
+
+
+def test_float64_gate_same_error_for_store_and_ndarray(tmp_path):
+    x = np.random.default_rng(0).normal(size=(64, 8))  # float64
+    with pytest.raises(ValueError) as e_arr:
+        prepare_inputs(x, caller="fit")
+    np.save(str(tmp_path / "bad64.npy"), x)
+    with pytest.raises(ValueError) as e_store:
+        prepare_inputs(MemmapStore(str(tmp_path / "bad64.npy")), caller="fit")
+    assert str(e_arr.value) == str(e_store.value)
+    assert "float64" in str(e_arr.value)
+
+
+# ---------------------------------------------------------------------------
+# The inverse head + explore path (one shared tiny pipeline run)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def pipeline_run(tmp_path_factory):
+    w = tiny("pipeline_phi4_mini")
+    d = str(tmp_path_factory.mktemp("pipeline"))
+    return run_pipeline(
+        w, d, inverse_steps=300, nomad_overrides={"n_epochs": 4}
+    )
+
+
+def test_run_pipeline_artifacts(pipeline_run):
+    r = pipeline_run
+    assert r.store.shape == (r.workload.n_docs, r.workload.d_model)
+    assert set(r.stage_s) == {"embed", "fit", "inverse_train"}
+    assert os.path.exists(os.path.join(r.checkpoint_dir, "index.npz"))
+    assert os.path.exists(os.path.join(r.checkpoint_dir, "inverse.npz"))
+
+
+def test_inverse_fixed_seed_is_deterministic(pipeline_run):
+    fz = pipeline_run.frozen
+    a = inverse_from_frozen(fz, hidden=(32,), steps=50, seed=7)
+    b = inverse_from_frozen(fz, hidden=(32,), steps=50, seed=7)
+    c = inverse_from_frozen(fz, hidden=(32,), steps=50, seed=8)
+    for (wa, ba), (wb, bb) in zip(a.layers, b.layers):
+        np.testing.assert_array_equal(wa, wb)
+        np.testing.assert_array_equal(ba, bb)
+    assert any(
+        not np.array_equal(wa, wc) for (wa, _), (wc, _) in zip(a.layers, c.layers)
+    )
+
+
+def test_inverse_roundtrip_clears_floor(pipeline_run):
+    r = pipeline_run
+    score = roundtrip_score(r.inverse, r.fit.embedding, r.store.materialize())
+    assert score == pytest.approx(r.roundtrip_score)
+    assert score >= ROUNDTRIP_R2_FLOOR, (
+        f"inverse round-trip R² {score:.3f} fell under the committed floor "
+        f"{ROUNDTRIP_R2_FLOOR} — the 2D→embedding head no longer recovers "
+        "the corpus structure"
+    )
+
+
+def test_inverse_checkpoint_reload_bit_equal(pipeline_run, tmp_path):
+    inv = pipeline_run.inverse
+    reloaded = load_inverse(pipeline_run.checkpoint_dir)
+    assert reloaded.hidden == inv.hidden
+    assert reloaded.seed == inv.seed and reloaded.train_steps == inv.train_steps
+    for (wa, ba), (wb, bb) in zip(inv.layers, reloaded.layers):
+        np.testing.assert_array_equal(wa, wb)
+        np.testing.assert_array_equal(ba, bb)
+    np.testing.assert_array_equal(inv.mu_in, reloaded.mu_in)
+    np.testing.assert_array_equal(inv.sd_in, reloaded.sd_in)
+    # decode is the same function: identical outputs on identical inputs
+    q = np.asarray([[0.0, 0.0], [1.5, -2.0]], np.float32)
+    np.testing.assert_array_equal(inv.decode(q), reloaded.decode(q))
+
+
+def test_inverse_load_missing_is_actionable(tmp_path):
+    assert load_inverse(str(tmp_path), missing_ok=True) is None
+    with pytest.raises(FileNotFoundError, match="train_inverse"):
+        load_inverse(str(tmp_path))
+
+
+def test_inverse_decode_validates(pipeline_run):
+    inv = pipeline_run.inverse
+    with pytest.raises(ValueError, match="expected"):
+        inv.decode(np.zeros((3, 5), np.float32))
+    with pytest.raises(ValueError, match="NaN"):
+        inv.decode(np.asarray([[np.nan, 0.0]], np.float32))
+
+
+def test_train_inverse_validates_pairs():
+    with pytest.raises(ValueError, match="matched"):
+        train_inverse(np.zeros((5, 2), np.float32), np.zeros((6, 8), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Public frozen-index kNN: FrozenMap.neighbors
+# ---------------------------------------------------------------------------
+
+
+def test_neighbors_matches_transform_report(pipeline_run):
+    """The public query must be the transform path's neighbor report,
+    bit-for-bit — same kernels, same order, same padding convention."""
+    from repro.serve.server import MapServer
+
+    fz = pipeline_run.frozen
+    q = pipeline_run.store.materialize()[:32]
+    res = MapServer(fz).transform(q, seed=0)
+    ids, dists = fz.neighbors(q)
+    np.testing.assert_array_equal(ids, res.neighbor_ids)
+    np.testing.assert_array_equal(dists, res.neighbor_dists)
+
+
+def test_neighbors_self_lookup_and_shapes(pipeline_run):
+    fz = pipeline_run.frozen
+    x = pipeline_run.store.materialize()
+    ids, dists = fz.neighbors(x[7], k=3)  # 1-D query → 1-D result
+    assert ids.shape == (3,) and dists.shape == (3,)
+    assert ids[0] == 7 and dists[0] == pytest.approx(0.0, abs=1e-2)
+    with pytest.raises(ValueError, match="expected"):
+        fz.neighbors(np.zeros((2, fz.dim + 1), np.float32))
+    with pytest.raises(ValueError, match="NaN"):
+        fz.neighbors(np.full((fz.dim,), np.nan, np.float32))
+    with pytest.raises(ValueError, match="capacity"):
+        fz.neighbors(x[0], k=fz.capacity + 1)
+
+
+# ---------------------------------------------------------------------------
+# Service explore: checkpoint-loaded handle serves "what lives here?"
+# ---------------------------------------------------------------------------
+
+
+def test_service_explore_from_checkpoint(pipeline_run):
+    svc = MapService()
+    try:
+        handle = svc.registry.load(pipeline_run.checkpoint_dir)
+        assert handle.describe()["has_inverse"] is True
+        theta = pipeline_run.fit.embedding
+        out = svc.explore(theta[:4], k=5)
+        assert out.embedding.shape == (4, pipeline_run.frozen.dim)
+        assert out.neighbor_ids.shape == (4, 5)
+        assert (out.neighbor_ids >= -1).all()
+        assert out.map_version == handle.version
+        # the decoded vector's neighborhood is the frozen index's answer
+        ids, dists = pipeline_run.frozen.neighbors(out.embedding, k=5)
+        np.testing.assert_array_equal(ids, out.neighbor_ids)
+        np.testing.assert_array_equal(dists, out.neighbor_dists)
+    finally:
+        svc.close()
+
+
+def test_service_explore_without_inverse_is_actionable(pipeline_run):
+    svc = MapService()
+    try:
+        svc.registry.add(pipeline_run.frozen)  # in-process add: no head
+        assert svc.registry.get().describe()["has_inverse"] is False
+        with pytest.raises(ValueError, match="inverse head"):
+            svc.explore([0.0, 0.0])
+    finally:
+        svc.close()
+
+
+def test_http_explore_endpoint(pipeline_run):
+    pytest.importorskip("fastapi")
+    pytest.importorskip("httpx")
+    from fastapi.testclient import TestClient
+
+    from repro.service.app import create_app
+
+    svc = MapService()
+    svc.registry.load(pipeline_run.checkpoint_dir)
+    theta = pipeline_run.fit.embedding
+    with TestClient(create_app(svc)) as c:
+        r = c.post("/explore", json={"coords": [theta[0].tolist()], "k": 3})
+        assert r.status_code == 200, r.text
+        body = r.json()
+        assert len(body["neighbor_ids"][0]) == 3
+        assert body["map_version"] == svc.registry.active_version
+        # strict JSON: dead edges are -1.0, never Infinity
+        assert all(
+            d >= 0.0 or d == -1.0 for d in body["neighbor_dists"][0]
+        )
+        r = c.post("/explore", json={"coords": [[0.0, 0.0, 0.0]]})
+        assert r.status_code == 400
+        r = c.post("/explore", json={"coords": [[0.0, 0.0]], "map_version": "nope"})
+        assert r.status_code == 404
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# RSS regression: the streamed example must stay under the materializing path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_streamed_example_rss_below_materialized(tmp_path):
+    """Runs examples/embed_and_map.py --rss-compare in a subprocess and
+    asserts the streamed embed's peak host RSS (ru_maxrss watermark,
+    sampled before the materializing embed runs in the same process)
+    stays measurably below the materializing path's.
+
+    Launched through the ``python -c`` interposer: a fork()ed child
+    inherits the parent's RSS as its initial ru_maxrss, so spawning
+    straight from a multi-GB pytest process would floor both phases at
+    pytest's own RSS and void the comparison (the PR-5 pattern)."""
+    out = str(tmp_path / "rss.json")
+    interpose = (
+        "import subprocess, sys; "
+        "sys.exit(subprocess.run(sys.argv[1:]).returncode)"
+    )
+    r = subprocess.run(
+        [
+            sys.executable, "-c", interpose,
+            sys.executable, "examples/embed_and_map.py",
+            "--rss-compare", "--train-steps", "0",
+            "--docs", "16384", "--seq-len", "16", "--d-model", "256",
+            "--n-layers", "2", "--doc-batch", "256",
+            "--workdir", str(tmp_path / "work"),
+            "--json", out,
+        ],
+        capture_output=True, text=True, timeout=1800,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        cwd=REPO,
+    )
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    with open(out) as f:
+        res = json.load(f)
+    rss = res["rss_compare"]
+    assert rss["streamed_peak_mb"] > 0 and rss["monolithic_peak_mb"] > 0
+    # the materializing path holds the chunk list AND the concatenated
+    # (N, D) matrix (16 MB each at this size) the streamed path never
+    # allocates; demand a clear margin over allocator jitter
+    assert rss["monolithic_peak_mb"] - rss["streamed_peak_mb"] >= 12.0, rss
